@@ -1,0 +1,61 @@
+"""Paper Figs. 10/11: NAP speedup scalability vs number of attributes and
+vs number of cases (SyD10M9A subsets, 7 workers)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GROW, build_with_trace, emit
+from repro.core import simulate
+from repro.data import quest
+
+
+def _with_extra_attrs(n_cases: int, extra: int, seed: int = 0):
+    ds = quest.generate(n_cases, function=5, seed=seed)
+    if not extra:
+        return ds
+    rng = np.random.default_rng(seed + 1)
+    import dataclasses
+    cols = [ds.x]
+    edges = list(ds.bin_edges)
+    kinds = list(ds.attr_is_cont)
+    nb = list(ds.n_bins)
+    extra_cols = []
+    for _ in range(extra):                      # random uniform attributes
+        b = 64
+        extra_cols.append(rng.integers(0, b, ds.n_cases).astype(np.int32))
+        edges.append(np.arange(b, dtype=np.float64))
+        kinds.append(True)
+        nb.append(b)
+    x = np.concatenate([ds.x] + [c[:, None] for c in extra_cols], axis=1)
+    return dataclasses.replace(
+        ds, x=x, attr_is_cont=np.asarray(kinds),
+        n_bins=np.asarray(nb, np.int32), bin_edges=tuple(edges),
+        attr_names=tuple(f"a{i}" for i in range(x.shape[1])))
+
+
+def run() -> list[dict]:
+    rows = []
+    # Fig. 10: speedup vs #attributes at fixed cases
+    for extra in (0, 9, 27):
+        ds = _with_extra_attrs(20_000, extra)
+        _, trace, cm, seq_s = build_with_trace(ds)
+        r = simulate.simulate(trace, n_workers=7, strategy="nap",
+                              policy="ws", cost=cm)
+        rows.append(dict(name=f"fig10/attrs{9+extra}",
+                         us_per_call=f"{seq_s*1e6:.0f}",
+                         speedup7=round(r.speedup, 3)))
+    # Fig. 11: speedup vs #cases
+    for n in (5_000, 20_000, 80_000):
+        ds = quest.generate(n, function=5, seed=1)
+        _, trace, cm, seq_s = build_with_trace(ds)
+        r = simulate.simulate(trace, n_workers=7, strategy="nap",
+                              policy="ws", cost=cm)
+        rows.append(dict(name=f"fig11/cases{n}",
+                         us_per_call=f"{seq_s*1e6:.0f}",
+                         speedup7=round(r.speedup, 3)))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

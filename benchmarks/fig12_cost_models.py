@@ -1,0 +1,31 @@
+"""Paper Fig. 12: total execution time per buildAttTest cost model
+(|T| < c r^2  vs  alpha < r  vs  |T| < c r log r), NAP, 7 workers."""
+
+from __future__ import annotations
+
+from benchmarks.common import build_with_trace, emit, load_scaled
+from repro.core import simulate
+from repro.data import datasets
+
+
+def run() -> list[dict]:
+    rows = []
+    for name in datasets.TABLE1:
+        ds = load_scaled(name)
+        _, trace, cm, seq_s = build_with_trace(ds)
+        times = {}
+        tasks = {}
+        for model in ("nsq", "alpha", "nlogn"):
+            r = simulate.simulate(trace, n_workers=7, strategy="nap",
+                                  policy="ws", cost=cm, cost_model=model)
+            times[f"t_{model}"] = round(r.makespan, 4)
+            tasks[f"att_{model}"] = r.n_att_tasks
+        best = min(("nsq", "alpha", "nlogn"), key=lambda m: times[f"t_{m}"])
+        rows.append(dict(name=f"fig12/{name}",
+                         us_per_call=f"{seq_s*1e6:.0f}",
+                         **times, **tasks, best=best))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,27 @@
+"""Paper Fig. 13: DRR vs OD vs WS scheduling policies (SyD dataset, NAP)."""
+
+from __future__ import annotations
+
+from benchmarks.common import build_with_trace, emit, load_scaled
+from repro.core import simulate
+
+WORKERS = (1, 2, 4, 6, 7, 8)
+
+
+def run() -> list[dict]:
+    ds = load_scaled("syd10m9a")
+    _, trace, cm, seq_s = build_with_trace(ds)
+    rows = []
+    for policy in ("drr", "od", "ws"):
+        speedups = {}
+        for w in WORKERS:
+            r = simulate.simulate(trace, n_workers=w, strategy="nap",
+                                  policy=policy, cost=cm)
+            speedups[f"w{w}"] = round(r.speedup, 3)
+        rows.append(dict(name=f"fig13/{policy}",
+                         us_per_call=f"{seq_s*1e6:.0f}", **speedups))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,34 @@
+"""Paper Fig. 8: NP-strategy speedup vs number of farm workers.
+
+Replay of the real task DAG (recorded from the sequential build on each
+scaled Table-1 dataset) through the farm simulator with per-task costs
+calibrated to the measured sequential time (see core/simulate.py).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import build_with_trace, emit, load_scaled
+from repro.core import simulate
+from repro.data import datasets
+
+WORKERS = (1, 2, 3, 4, 5, 6, 7, 8)
+
+
+def run(strategy: str = "np", tag: str = "fig8_np") -> list[dict]:
+    rows = []
+    for name in datasets.TABLE1:
+        ds = load_scaled(name)
+        tree, trace, cm, seq_s = build_with_trace(ds)
+        speedups = {}
+        for w in WORKERS:
+            r = simulate.simulate(trace, n_workers=w, strategy=strategy,
+                                  policy="ws", cost=cm)
+            speedups[f"w{w}"] = round(r.speedup, 3)
+        rows.append(dict(name=f"{tag}/{name}",
+                         us_per_call=f"{seq_s*1e6:.0f}",
+                         nodes=tree.size, **speedups))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,12 @@
+"""Paper Fig. 9: NAP-strategy speedup vs number of farm workers."""
+
+from benchmarks.common import emit
+from benchmarks.fig8_np import run as run_np
+
+
+def run() -> list[dict]:
+    return run_np(strategy="nap", tag="fig9_nap")
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,22 @@
+"""Batched serving example: 2 replicas, WS-scheduled continuous batching.
+
+The request scheduler is the paper's weighted-scheduling policy (weight =
+prompt length + budget), dispatching across model replicas exactly like the
+YaDT-FF emitter dispatches node tasks across workers.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    out = serve("gemma2_9b", reduced=True, n_requests=12, n_replicas=2,
+                n_slots=3, max_new=8, policy="ws")
+    print(f"completed {out['completed']} requests / {out['tokens']} tokens "
+          f"in {out['seconds']:.1f}s  ({out['tok_per_s']:.1f} tok/s)")
+    assert out["completed"] == 12
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end LM training driver: ~100M-param model, a few hundred steps.
+
+Uses the real production stack (config registry, sharded loader, jitted
+AdamW train step, checkpoint/restart).  The default below is a ~100M-param
+phi4-mini-family model; loss must drop measurably.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import base as cfgbase
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="phi4_mini")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: 8 layers x d512 x ff2048, 32k vocab, same family
+    cfg = dataclasses.replace(
+        cfgbase.get_config(args.arch),
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32_768, window=256)
+    print(f"training {cfg.name}-family model: "
+          f"{cfg.param_count()/1e6:.0f}M params")
+
+    out = train(args.arch, config=cfg, steps=args.steps,
+                global_batch=8, seq_len=256, lr=6e-4,
+                ckpt_dir=args.ckpt_dir, ckpt_every=100)
+    drop = out["first_loss"] - out["last_loss"]
+    print(f"loss {out['first_loss']:.3f} -> {out['last_loss']:.3f} "
+          f"(drop {drop:.3f})")
+    assert drop > 0.3, "training did not learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Per-architecture configs; see base.registry()."""

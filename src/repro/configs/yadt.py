@@ -1,0 +1,33 @@
+"""The paper's own workload as a first-class config: YaDT-FF tree growth.
+
+``--arch yadt`` selects the SPMD frontier engine over the SyD10M9A schema
+(paper Table 1).  The "train step" of this architecture is one frontier
+superstep; shapes reuse the ShapeSpec machinery with seq_len standing in
+for the case count processed per superstep.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.core.config import GrowConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class YaDTWorkload:
+    n_cases: int = 10_000_000
+    n_attrs: int = 9
+    n_bins: int = 256
+    n_classes: int = 2
+    max_children: int = 20          # widest discrete split (car: 20 values)
+    grow: GrowConfig = GrowConfig(max_nodes=1 << 18, frontier_slots=256)
+
+
+WORKLOAD = YaDTWorkload()
+
+CONFIG = ModelConfig(
+    name="yadt", family="tree",
+    n_layers=0, d_model=0, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=0,
+    notes="paper technique itself; dry-run lowers one frontier superstep "
+          "with cases sharded over data x attributes over model (NAP).",
+)

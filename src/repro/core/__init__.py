@@ -1,0 +1,15 @@
+"""The paper's contribution: farm-parallel C4.5 decision-tree induction.
+
+Public surface:
+
+  binning.fit / BinnedDataset   — EC4.5 rank-space representation
+  c45.build                     — sequential YaDT oracle (reference semantics)
+  frontier.build                — SPMD level-synchronous engine (NP/NAP)
+  GrowConfig                    — growth parameters incl. cost model/strategy
+  farm.Farm, scheduler.*        — farm-with-feedback + DRR/OD/WS policies
+  simulate.simulate             — discrete-event farm replay (paper figures)
+"""
+
+from repro.core.binning import BinnedDataset, fit, from_binned  # noqa: F401
+from repro.core.config import GrowConfig  # noqa: F401
+from repro.core.tree import Tree, predict, trees_equal  # noqa: F401

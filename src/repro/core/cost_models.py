@@ -1,0 +1,52 @@
+"""The paper's ``buildAttTest`` cost models (Sect. 4, second issue).
+
+Given a node with ``r`` training cases and ``c`` active attributes, decide
+whether to parallelise over *attributes* (NAP, fine grain — returns True) or
+over *nodes* (NP — returns False).  The three variants evaluated in the paper
+(Fig. 12; |T| is the whole-training-set size):
+
+  alpha :  α < r                (hand-tuned threshold, α = 1000)
+  nlogn :  |T| < c·r·log2(r)    (average-case quicksort grain)
+  nsq   :  |T| < c·r²           (worst-case grain; best performing — most
+                                 task over-provisioning)
+
+All tests are monotone in ``r``, so once a subtree switches to node
+parallelism it never switches back — the property the paper exploits and the
+frontier engine's two-phase schedule relies on.
+
+Functions are jnp-traceable (used inside the superstep for Fig. 15-style
+statistics) and also callable with plain floats (used by the farm simulator
+per task).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+COST_MODELS = ("alpha", "nlogn", "nsq")
+
+
+def build_att_test(model: str, *, n_total_cases: float, r, c,
+                   alpha: float = 1000.0):
+    """True where the node should use attribute parallelisation (NAP)."""
+    r = jnp.asarray(r, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    if model == "alpha":
+        return r > alpha
+    if model == "nlogn":
+        return n_total_cases < c * r * jnp.log2(jnp.maximum(r, 2.0))
+    if model == "nsq":
+        return n_total_cases < c * r * r
+    raise ValueError(f"unknown cost model {model!r}; choose from {COST_MODELS}")
+
+
+def task_grain(model: str, *, r: float, c: float) -> float:
+    """Analytic node-processing grain used by the simulator's cost table.
+
+    The paper models node::split as quicksort-dominated: average c·r·log r,
+    worst-case c·r².  ``task_grain`` returns the average-case estimate (the
+    simulator calibrates the constant from measured oracle timings).
+    """
+    import math
+    r = max(float(r), 1.0)
+    return float(c) * r * max(math.log2(r), 1.0)

@@ -1,0 +1,140 @@
+"""A farm-with-feedback executor (FastFlow's D&C skeleton, paper Fig. 1/5).
+
+Host-side, threaded implementation of the skeleton YaDT-FF is built on:
+
+  * an *emitter* whose ``svc`` is called once with ``None`` at start-up and
+    then once per task returned by a worker (the feedback channel);
+  * ``n_workers`` *workers* whose ``svc`` processes one task and returns it;
+  * per-worker bounded FIFO input queues + a MPSC feedback queue;
+  * a pluggable scheduling policy (:mod:`repro.core.scheduler`).
+
+The emitter signals completion by the farm observing zero in-flight tasks
+with an idle emitter — the threaded analogue of the paper's
+``noMoreTasks() && !nChilds`` test (§6.10).
+
+On this container (1 CPU core) the farm cannot exhibit wall-clock speedup —
+that is what :mod:`repro.core.simulate` measures — but the semantics are
+real and the serving engine uses this class to dispatch requests across
+model replicas with the paper's WS policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+from repro.core.scheduler import Policy, WS
+
+GO_ON = object()   # FF_GO_ON: emitter consumed the feedback, keep running.
+
+
+@dataclasses.dataclass
+class Task:
+    payload: Any
+    weight: float = 1.0
+    label: str = "BUILD_NODE"
+
+
+class _Worker:
+    def __init__(self, idx: int, capacity: int):
+        self.idx = idx
+        self.q: queue.Queue = queue.Queue(maxsize=capacity)
+        self._weight = 0.0
+        self._lock = threading.Lock()
+        self.busy_time = 0.0
+        self.n_tasks = 0
+
+    # -- WorkerView protocol -------------------------------------------------
+    def queue_len(self) -> int:
+        return self.q.qsize()
+
+    def queued_weight(self) -> float:
+        with self._lock:
+            return self._weight
+
+    def capacity(self) -> int:
+        return self.q.maxsize
+
+    # -- weight accounting ---------------------------------------------------
+    def add_weight(self, w: float) -> None:
+        with self._lock:
+            self._weight += w
+
+    def done_weight(self, w: float) -> None:
+        with self._lock:
+            self._weight -= w
+
+
+class Farm:
+    """``ff_farm<ws_scheduler>`` (paper Fig. 5): emitter + workers + feedback."""
+
+    def __init__(self, n_workers: int, *, policy: Policy | None = None,
+                 queue_size: int = 4096):
+        if n_workers < 1:
+            raise ValueError("farm needs at least one worker")
+        self.policy = policy or WS()
+        cap = getattr(self.policy, "forced_capacity", queue_size)
+        self.workers = [_Worker(i, cap) for i in range(n_workers)]
+        self.feedback: queue.Queue = queue.Queue()
+        self.emitter_busy = 0.0
+
+    # ------------------------------------------------------------------ run
+    def run(self,
+            emitter_svc: Callable[[Any, Callable[[Any, float], None]], Any],
+            worker_svc: Callable[[Any], Any]) -> dict[str, Any]:
+        """Run to completion; returns execution-breakdown stats (cf. Fig 14)."""
+        inflight = 0
+        stop = object()
+
+        def send_out(payload: Any, weight: float = 1.0) -> None:
+            nonlocal inflight
+            while True:
+                i = self.policy.pick(weight, self.workers)
+                if i is not None:
+                    break
+                time.sleep(0)          # all queues full: yield and retry
+            wk = self.workers[i]
+            wk.add_weight(weight)
+            inflight += 1
+            wk.q.put((payload, weight))
+
+        def worker_loop(wk: _Worker) -> None:
+            while True:
+                item = wk.q.get()
+                if item is stop:
+                    return
+                payload, weight = item
+                t0 = time.perf_counter()
+                result = worker_svc(payload)
+                wk.busy_time += time.perf_counter() - t0
+                wk.n_tasks += 1
+                wk.done_weight(weight)
+                self.feedback.put(result)
+
+        threads = [threading.Thread(target=worker_loop, args=(w,), daemon=True)
+                   for w in self.workers]
+        for t in threads:
+            t.start()
+
+        t0 = time.perf_counter()
+        emitter_svc(None, send_out)                 # start-up call (§6.2)
+        self.emitter_busy += time.perf_counter() - t0
+        while inflight > 0:
+            result = self.feedback.get()
+            inflight -= 1
+            t0 = time.perf_counter()
+            emitter_svc(result, send_out)           # feedback call
+            self.emitter_busy += time.perf_counter() - t0
+
+        for w in self.workers:
+            w.q.put(stop)
+        for t in threads:
+            t.join()
+        return dict(
+            emitter_busy=self.emitter_busy,
+            worker_busy=[w.busy_time for w in self.workers],
+            worker_tasks=[w.n_tasks for w in self.workers],
+        )

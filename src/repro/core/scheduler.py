@@ -1,0 +1,110 @@
+"""Farm task-scheduling policies (paper Sect. 5, Fig. 13).
+
+The emitter assigns each outgoing task to a worker queue according to one of:
+
+  DRR — Dynamic Round-Robin: cycle through workers, skipping full queues
+        (paper uses queue size 4096).
+  OD  — On-Demand: DRR with queue size 1 (fully online).
+  WS  — Weighted Scheduling: the paper's contribution — each task carries a
+        weight (= r, the number of cases at the node) and goes to the worker
+        with the lowest total queued+running weight.
+
+Policies are pure-Python and deliberately tiny: they are shared by the real
+threaded farm (:mod:`repro.core.farm`), the discrete-event simulator
+(:mod:`repro.core.simulate`) and the serving engine's request dispatcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence
+
+
+class WorkerView(Protocol):
+    """What a policy may observe about a worker (FastFlow lock-free queues
+    expose exactly queue occupancy; WS additionally tracks weights)."""
+
+    def queue_len(self) -> int: ...
+    def queued_weight(self) -> float: ...
+    def capacity(self) -> int: ...
+
+
+@dataclasses.dataclass
+class QueueState:
+    """Plain-data WorkerView used by the simulator and tests."""
+    tasks: int = 0
+    weight: float = 0.0
+    cap: int = 4096
+
+    def queue_len(self) -> int:
+        return self.tasks
+
+    def queued_weight(self) -> float:
+        return self.weight
+
+    def capacity(self) -> int:
+        return self.cap
+
+
+class Policy:
+    name = "base"
+
+    def pick(self, weight: float, workers: Sequence[WorkerView]) -> int | None:
+        """Return the worker index, or None when every queue is full."""
+        raise NotImplementedError
+
+
+class DRR(Policy):
+    """Dynamic Round-Robin, skipping workers with a full input queue."""
+
+    name = "drr"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def pick(self, weight: float, workers: Sequence[WorkerView]) -> int | None:
+        n = len(workers)
+        for off in range(n):
+            i = (self._next + off) % n
+            if workers[i].queue_len() < workers[i].capacity():
+                self._next = (i + 1) % n
+                return i
+        return None
+
+
+class OD(DRR):
+    """On-Demand: DRR over queues of capacity 1 (the farm enforces cap=1)."""
+
+    name = "od"
+    forced_capacity = 1
+
+
+class WS(Policy):
+    """Weighted Scheduling: least total queued weight wins (ties: lowest id).
+
+    This is the policy the paper adds to FastFlow for YaDT-FF; with task
+    weight = r it behaves like an efficient online scheduler (Fig. 13).
+    """
+
+    name = "ws"
+
+    def pick(self, weight: float, workers: Sequence[WorkerView]) -> int | None:
+        best, best_w = None, float("inf")
+        for i, wk in enumerate(workers):
+            if wk.queue_len() >= wk.capacity():
+                continue
+            qw = wk.queued_weight()
+            if qw < best_w:
+                best, best_w = i, qw
+        return best
+
+
+def make_policy(name: str) -> Policy:
+    name = name.lower()
+    if name == "drr":
+        return DRR()
+    if name == "od":
+        return OD()
+    if name == "ws":
+        return WS()
+    raise ValueError(f"unknown scheduling policy {name!r} (drr|od|ws)")

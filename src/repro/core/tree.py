@@ -1,0 +1,153 @@
+"""Fixed-capacity array decision tree.
+
+Both engines (the sequential YaDT oracle and the SPMD frontier builder) emit
+this structure, so trees are directly comparable and prediction is one shared
+vectorized routine.
+
+Layout (capacity M, C classes):
+
+  node_attr[i]      int32  attribute tested at node i, -1 for a leaf
+  node_split_bin[i] int32  continuous: threshold bin (test: x <= bin);
+                           discrete: -1 (child index == the value's bin)
+  node_child0[i]    int32  id of the first child (children are contiguous)
+  node_nchild[i]    int32  number of children (0 for leaves)
+  node_class[i]     int32  majority class (prediction fallback at every node)
+  node_freq[i, c]   f32    weighted class frequencies seen at the node
+  node_depth[i]     int32  root = 0
+  n_nodes           int    live prefix of the arrays
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Tree:
+    node_attr: jnp.ndarray
+    node_split_bin: jnp.ndarray
+    node_child0: jnp.ndarray
+    node_nchild: jnp.ndarray
+    node_class: jnp.ndarray
+    node_freq: jnp.ndarray
+    node_depth: jnp.ndarray
+    n_nodes: jnp.ndarray  # int32 scalar
+
+    @staticmethod
+    def empty(capacity: int, n_classes: int) -> "Tree":
+        return Tree(
+            node_attr=jnp.full((capacity,), -1, jnp.int32),
+            node_split_bin=jnp.full((capacity,), -1, jnp.int32),
+            node_child0=jnp.zeros((capacity,), jnp.int32),
+            node_nchild=jnp.zeros((capacity,), jnp.int32),
+            node_class=jnp.zeros((capacity,), jnp.int32),
+            node_freq=jnp.zeros((capacity, n_classes), jnp.float32),
+            node_depth=jnp.zeros((capacity,), jnp.int32),
+            n_nodes=jnp.int32(0),
+        )
+
+    # ---- host-side conveniences (numpy views, cut to the live prefix) ----
+
+    def to_numpy(self) -> "Tree":
+        return jax.tree.map(np.asarray, self)
+
+    @property
+    def size(self) -> int:
+        return int(self.n_nodes)
+
+    @property
+    def depth(self) -> int:
+        n = self.size
+        return int(np.max(np.asarray(self.node_depth)[:n])) if n else 0
+
+    @property
+    def n_leaves(self) -> int:
+        n = self.size
+        return int(np.sum(np.asarray(self.node_nchild)[:n] == 0))
+
+    def pretty(self, max_nodes: int = 40) -> str:
+        t = self.to_numpy()
+        lines = []
+        for i in range(min(self.size, max_nodes)):
+            pad = "  " * int(t.node_depth[i])
+            if t.node_nchild[i] == 0:
+                lines.append(f"{pad}#{i} leaf -> class {int(t.node_class[i])}")
+            else:
+                lines.append(
+                    f"{pad}#{i} attr {int(t.node_attr[i])}"
+                    f" bin<={int(t.node_split_bin[i])}"
+                    f" children [{int(t.node_child0[i])}.."
+                    f"{int(t.node_child0[i]) + int(t.node_nchild[i]) - 1}]")
+        if self.size > max_nodes:
+            lines.append(f"... ({self.size - max_nodes} more)")
+        return "\n".join(lines)
+
+
+def _descend_once(tree: Tree, attr_is_cont: jnp.ndarray, node: jnp.ndarray,
+                  x_row_bins: jnp.ndarray) -> jnp.ndarray:
+    """One routing step for a batch of cases sitting at ``node``."""
+    attr = tree.node_attr[node]
+    nchild = tree.node_nchild[node]
+    is_leaf = nchild == 0
+    b = jnp.take_along_axis(x_row_bins, jnp.maximum(attr, 0)[:, None],
+                            axis=1)[:, 0]
+    cont = attr_is_cont[jnp.maximum(attr, 0)]
+    child_cont = jnp.where(b <= tree.node_split_bin[node], 0, 1)
+    child = jnp.where(cont, child_cont, b).astype(jnp.int32)
+    # Unknown value: C4.5 prediction follows the heaviest child; we route to
+    # the child holding the largest weight — precomputed as node_class-side
+    # fallback: follow child 0..nchild-1 with max freq.  We approximate with
+    # the majority-weight child recorded during growth via node_class of the
+    # children; for simplicity route unknowns to the heaviest child by weight.
+    heaviest = _heaviest_child(tree, node, nchild)
+    child = jnp.where(b < 0, heaviest, child)
+    child = jnp.clip(child, 0, jnp.maximum(nchild - 1, 0))
+    nxt = tree.node_child0[node] + child
+    return jnp.where(is_leaf, node, nxt)
+
+
+def _heaviest_child(tree: Tree, node: jnp.ndarray, nchild: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Index (0-based among siblings) of the child with the largest weight."""
+    c0 = tree.node_child0[node]
+    max_h = 8  # scan a bounded window; trees with wider splits fall back to 0
+    ws = []
+    for j in range(max_h):
+        cid = c0 + j
+        valid = j < nchild
+        ws.append(jnp.where(valid, jnp.sum(tree.node_freq[cid], axis=-1),
+                            -jnp.inf))
+    return jnp.argmax(jnp.stack(ws, axis=-1), axis=-1).astype(jnp.int32)
+
+
+def predict(tree: Tree, x_bins: jnp.ndarray, attr_is_cont: jnp.ndarray,
+            max_depth: int = 64) -> jnp.ndarray:
+    """Vectorized class prediction for binned cases ``x_bins (N, A)``."""
+    x_bins = jnp.asarray(x_bins, jnp.int32)
+    attr_is_cont = jnp.asarray(attr_is_cont, bool)
+    node = jnp.zeros((x_bins.shape[0],), jnp.int32)
+
+    def body(_, node):
+        return _descend_once(tree, attr_is_cont, node, x_bins)
+
+    node = jax.lax.fori_loop(0, max_depth, body, node)
+    return tree.node_class[node]
+
+
+def trees_equal(a: Tree, b: Tree, *, freq_tol: float = 1e-3) -> bool:
+    """Structural equality of the live prefixes (host-side, for tests)."""
+    a, b = a.to_numpy(), b.to_numpy()
+    na, nb = int(a.n_nodes), int(b.n_nodes)
+    if na != nb:
+        return False
+    for f in ("node_attr", "node_split_bin", "node_child0", "node_nchild",
+              "node_class", "node_depth"):
+        if not np.array_equal(getattr(a, f)[:na], getattr(b, f)[:na]):
+            return False
+    return bool(np.allclose(a.node_freq[:na], b.node_freq[:na],
+                            atol=freq_tol, rtol=1e-4))

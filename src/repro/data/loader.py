@@ -1,0 +1,115 @@
+"""Sharded, deterministic, resumable LM token pipeline.
+
+Production data loading for the assigned-architecture fleet.  Design points
+that matter at 1000+ nodes:
+
+  * **Determinism** — batch ``i`` is a pure function of (seed, step), so any
+    host can regenerate any shard at any time; restart-after-failure never
+    replays or skips data.
+  * **Shard-by-construction** — each host materialises only its
+    ``(host_index, num_hosts)`` slice of the global batch; there is no
+    central dispatcher to fail.
+  * **Resumability** — the loader state is a single integer (``step``);
+    checkpoints persist it and ``seek(step)`` is O(1).
+  * **Prefetch overlap** — a one-slot software pipeline hides host->device
+    transfer behind the previous step's compute (double buffering).
+
+Offline container: the token source is a seeded PRNG stream shaped like a
+tokenized corpus (Zipf-ish marginals, document boundaries with EOS); swap
+``TokenSource`` for a real corpus reader in deployment — every other layer
+is unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LoaderConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    eos_id: int = 0
+    mean_doc_len: int = 512
+
+
+class TokenSource:
+    """Seeded synthetic corpus: batch index -> token block (pure function)."""
+
+    def __init__(self, cfg: LoaderConfig):
+        self.cfg = cfg
+
+    def block(self, step: int, row_lo: int, row_hi: int) -> np.ndarray:
+        cfg = self.cfg
+        rows = []
+        for r in range(row_lo, row_hi):
+            rng = np.random.default_rng(
+                (cfg.seed, step, r))            # content-addressed by (step,row)
+            # Zipf-ish marginals over the vocab, cheap to sample:
+            z = rng.zipf(1.3, size=cfg.seq_len + 1).astype(np.int64)
+            toks = (z - 1) % (cfg.vocab_size - 1) + 1
+            # document boundaries
+            n_eos = max(1, (cfg.seq_len + 1) // cfg.mean_doc_len)
+            pos = rng.integers(0, cfg.seq_len + 1, size=n_eos)
+            toks[pos] = cfg.eos_id
+            rows.append(toks)
+        return np.stack(rows).astype(np.int32)
+
+
+@dataclasses.dataclass
+class LoaderState:
+    step: int = 0
+
+
+class ShardedLoader:
+    """Per-host view of the global batch stream (data-parallel sharding)."""
+
+    def __init__(self, cfg: LoaderConfig, *, host_index: int = 0,
+                 num_hosts: int = 1, source: TokenSource | None = None):
+        if cfg.global_batch % num_hosts:
+            raise ValueError("global batch must divide evenly across hosts")
+        self.cfg = cfg
+        self.host_index = host_index
+        self.num_hosts = num_hosts
+        self.rows_per_host = cfg.global_batch // num_hosts
+        self.source = source or TokenSource(cfg)
+        self.state = LoaderState()
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        return dict(step=self.state.step)
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state.step = int(d["step"])
+
+    def seek(self, step: int) -> None:
+        self.state.step = int(step)
+
+    # -- iteration -------------------------------------------------------------
+    def next_batch(self) -> dict[str, np.ndarray]:
+        lo = self.host_index * self.rows_per_host
+        block = self.source.block(self.state.step, lo,
+                                  lo + self.rows_per_host)
+        self.state.step += 1
+        return dict(tokens=block[:, :-1], labels=block[:, 1:])
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+    def prefetched(self, device=None) -> Iterator[dict]:
+        """Double-buffered iterator: next host batch overlaps device compute."""
+        device = device or jax.devices()[0]
+        it = iter(self)
+        nxt = jax.device_put(next(it), device)
+        while True:
+            cur, nxt = nxt, None
+            host = next(it)
+            nxt = jax.device_put(host, device)   # enqueue before yielding
+            yield cur

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: flash attention forward (serving/prefill hot-spot).
+
+Grid layout ``(batch x kv_head x group, q_blocks, kv_blocks)`` with the KV
+axis innermost: the (qc, d) output block and the online-softmax statistics
+live in VMEM scratch across the KV sweep, so HBM sees each K/V block exactly
+once and the (qc, ck) logits tile never leaves VMEM — the standard
+flash-attention dataflow expressed as BlockSpecs.
+
+Causal + sliding-window masks are generated from block indices with iota
+(no mask tensors in HBM).  Fully-masked future blocks are *skipped* via
+``pl.when`` (the triangular schedule of the jnp path — on TPU the grid
+still enumerates the block, but the body is predicated off, saving the MXU
+work).
+
+Scope: forward only — training uses the custom-VJP jnp flash in
+``models/layers.py`` (a fused backward kernel is the natural next step).
+Validated in interpret mode against the pure-jnp oracle in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      q_chunk: int, kv_chunk: int, sq: int, sk: int,
+                      window: int, softcap: float, nk: int):
+    qi = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * q_chunk + jax.lax.broadcasted_iota(
+        jnp.int32, (q_chunk, 1), 0)
+    k_pos = ci * kv_chunk + jax.lax.broadcasted_iota(
+        jnp.int32, (1, kv_chunk), 1)
+
+    # causal frontier: skip blocks strictly above the diagonal (and, with a
+    # window, blocks entirely older than the window)
+    live = ci * kv_chunk <= qi * q_chunk + q_chunk - 1
+    if window > 0:
+        live &= (ci + 1) * kv_chunk - 1 >= qi * q_chunk - window + 1
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)                  # (qc, d)
+        k = k_ref[0].astype(jnp.float32)                  # (ck, d)
+        v = v_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (qc, ck)
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        mask = (q_pos >= k_pos) & (k_pos < sk) & (q_pos < sq)
+        if window > 0:
+            mask &= q_pos - k_pos < window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                               # (qc, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "q_chunk", "kv_chunk",
+                     "interpret"))
+def flash_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Sk, KV, D)
+    v: jnp.ndarray,            # (B, Sk, KV, D)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 256,
+    kv_chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (B, Sq, H, D); causal (+ optional window / softcap), GQA."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // kv_chunk)
+    pad_q = nq * q_chunk - sq
+    pad_k = nk * kv_chunk - sk
+
+    # heads-major flattening: rows of qf are (b, kv_head, group)
+    qf = (q * scale).transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+
+    grid = (b * h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_fwd_kernel, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            sq=sq, sk=sk, window=window, softcap=softcap, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, d), lambda bh, qi, ci: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_chunk, d),
+                         lambda bh, qi, ci, g=g: (bh // g, ci, 0)),
+            pl.BlockSpec((1, kv_chunk, d),
+                         lambda bh, qi, ci, g=g: (bh // g, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, d),
+                               lambda bh, qi, ci: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq * q_chunk, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+            pltpu.VMEM((q_chunk, 1), jnp.float32),
+            pltpu.VMEM((q_chunk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: frontier histogram via one-hot MXU matmuls.
+
+The splitAtt hot-spot of the SPMD tree engine is building the
+``(K nodes, A attrs, B+1 bins, C classes)`` weighted-count tensor from N
+cases.  A GPU port would scatter-add into gmem atomics; the TPU-native
+formulation turns the scatter into a matmul so the MXU does the counting:
+
+    for each case tile T and attribute a:
+        E  = onehot( (slot, bin) -> local row )         (T, Kblk*Bblk)
+        Yw = onehot(class) * weight                     (T, C)
+        hist_block += E^T @ Yw                          (Kblk*Bblk, C)
+
+The grid is (K blocks, A, B blocks, case tiles) with the case-tile axis
+innermost, so each output block stays resident in VMEM while every case tile
+streams through HBM exactly once per (K,B) window.
+
+Unknown values occupy the extra bin index B (consumed by splitPost for the
+heaviest-child routing).  Cases whose node is not in the frontier carry
+slot = -1 and fall outside every window.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(x_ref, y_ref, w_ref, slot_ref, out_ref, *,
+                 block_k: int, block_b: int, n_classes: int):
+    kb = pl.program_id(0)
+    bb = pl.program_id(2)
+    t = pl.program_id(3)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xb = x_ref[:, 0]                      # (T,) bin of this attribute
+    sl = slot_ref[:]                      # (T,) frontier slot (-1 = inactive)
+    yv = y_ref[:]
+    wv = w_ref[:].astype(jnp.float32)
+
+    k0 = kb * block_k
+    b0 = bb * block_b
+    in_win = ((sl >= k0) & (sl < k0 + block_k)
+              & (xb >= b0) & (xb < b0 + block_b))
+    rows = (sl - k0) * block_b + (xb - b0)          # (T,) local row id
+    rows = jnp.where(in_win, rows, -1)
+
+    n_rows = block_k * block_b
+    e = (rows[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, n_rows), 1)
+         ).astype(jnp.float32)                       # (T, Kblk*Bblk)
+    cls = (yv[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, n_classes), 1)).astype(jnp.float32)
+    yw = cls * wv[:, None]                           # (T, C)
+
+    acc = jax.lax.dot_general(
+        e, yw, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Kblk*Bblk, C)
+    out_ref[...] += acc.reshape(block_k, 1, block_b, n_classes)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_slots", "n_bins", "n_classes", "block_t", "block_k",
+                     "block_b", "interpret"))
+def frontier_histogram(
+    x: jnp.ndarray,          # int32 (N, A) bins; -1 = unknown
+    y: jnp.ndarray,          # int32 (N,) class labels
+    w: jnp.ndarray,          # f32 (N,) case weights
+    slot: jnp.ndarray,       # int32 (N,) frontier slot; -1 = not in frontier
+    *,
+    n_slots: int,
+    n_bins: int,             # B; the kernel emits B+1 (unknown bin last)
+    n_classes: int,
+    block_t: int = 512,
+    block_k: int = 8,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (K, A, B+1, C) float32 weighted counts."""
+    n, a_dim = x.shape
+    b1 = n_bins + 1
+
+    # Unknown values -> bin index B; pad every shape to its block multiple.
+    x = jnp.where(x >= 0, x, n_bins).astype(jnp.int32)
+    pad_n = (-n) % block_t
+    if pad_n:
+        x = jnp.pad(x, ((0, pad_n), (0, 0)))
+        y = jnp.pad(y, (0, pad_n))
+        w = jnp.pad(w, (0, pad_n))
+        slot = jnp.pad(slot, (0, pad_n), constant_values=-1)
+    pad_k = (-n_slots) % block_k
+    pad_b = (-b1) % block_b
+    kp, bp = n_slots + pad_k, b1 + pad_b
+
+    grid = (kp // block_k, a_dim, bp // block_b, (n + pad_n) // block_t)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, block_k=block_k, block_b=block_b,
+                          n_classes=n_classes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 1), lambda kb, a, bb, t: (t, a)),
+            pl.BlockSpec((block_t,), lambda kb, a, bb, t: (t,)),
+            pl.BlockSpec((block_t,), lambda kb, a, bb, t: (t,)),
+            pl.BlockSpec((block_t,), lambda kb, a, bb, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((block_k, 1, block_b, n_classes),
+                               lambda kb, a, bb, t: (kb, a, bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, a_dim, bp, n_classes),
+                                       jnp.float32),
+        interpret=interpret,
+    )(x, y.astype(jnp.int32), w.astype(jnp.float32), slot.astype(jnp.int32))
+    return out[:n_slots, :, :b1, :]

@@ -1,0 +1,50 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On TPU the kernels run natively; on CPU (this container) they execute in
+``interpret=True`` mode so every caller — including the frontier engine with
+``impl="pallas"`` — exercises the real kernel bodies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import histogram as _histogram
+from repro.kernels import split_gain as _split_gain
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def frontier_histogram(x, y, w, slot, *, n_slots: int, n_bins: int,
+                       n_classes: int, block_t: int = 512, block_k: int = 8,
+                       block_b: int = 128,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """(K, A, B+1, C) weighted counts — MXU one-hot matmul kernel."""
+    if interpret is None:
+        interpret = _on_cpu()
+    # Shrink blocks to the problem so interpret-mode tests stay fast.
+    block_k = min(block_k, max(1, n_slots))
+    block_b = min(block_b, n_bins + 1)
+    block_t = min(block_t, max(8, x.shape[0]))
+    return _histogram.frontier_histogram(
+        x, y, w, slot, n_slots=n_slots, n_bins=n_bins, n_classes=n_classes,
+        block_t=block_t, block_k=block_k, block_b=block_b,
+        interpret=interpret)
+
+
+def split_gain(hist, total_w, attr_is_cont, n_bins, *, min_objs: float = 2.0,
+               criterion: str = "gain", block_k: int = 8, block_a: int = 8,
+               interpret: bool | None = None):
+    """(score, split_bin) per (node, attribute) — fused scan/entropy kernel."""
+    if interpret is None:
+        interpret = _on_cpu()
+    k, a_dim = hist.shape[:2]
+    block_k = min(block_k, max(1, k))
+    block_a = min(block_a, max(1, a_dim))
+    return _split_gain.split_gain(
+        hist, total_w, attr_is_cont, n_bins, min_objs=min_objs,
+        criterion=criterion, block_k=block_k, block_a=block_a,
+        interpret=interpret)

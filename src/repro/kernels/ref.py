@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy
+
+
+def frontier_histogram_ref(x, y, w, slot, *, n_slots: int, n_bins: int,
+                           n_classes: int) -> jnp.ndarray:
+    """(K, A, B+1, C) weighted counts via one flat segment-sum."""
+    from repro.core.frontier import frontier_histogram_jnp
+    return frontier_histogram_jnp(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(w), jnp.asarray(slot),
+        n_slots=n_slots, n_bins=n_bins, n_classes=n_classes)
+
+
+def split_gain_ref(hist, total_w, attr_is_cont, n_bins, *,
+                   min_objs: float = 2.0, criterion: str = "gain"):
+    """(score, split_bin) of shape (K, A) via the shared scorer."""
+    return entropy.gains_from_histogram(
+        jnp.asarray(hist), total_w=jnp.asarray(total_w),
+        attr_is_cont=jnp.asarray(attr_is_cont),
+        n_bins=jnp.asarray(n_bins), min_objs=min_objs, criterion=criterion)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: fused split-gain scoring ("splitAtt" compute phase).
+
+Given the frontier histogram ``(K, A, B, C)`` this kernel fuses, per
+(node, attribute) block and entirely in VMEM:
+
+  * the bin prefix-scan (left/right partition counts),
+  * the C4.5 entropy/gain evaluation of every candidate threshold
+    (continuous) or of the multiway split (discrete),
+  * the known-fraction F scaling and MINOBJS validity masks,
+  * the argmax over candidate bins.
+
+One HBM read of the histogram produces the two tiny (K, A) result planes —
+the roofline-optimal shape for this stage (the naive path materialises the
+(K, A, B, C) cumsum and (K, A, B) gain tensors in HBM).
+
+The kernel body calls the *same* jnp scoring functions as every other engine
+(:mod:`repro.core.entropy`), so numerics match the oracle bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import entropy
+
+
+def _gain_kernel(hist_ref, tw_ref, cont_ref, nbins_ref,
+                 score_ref, bin_ref, *, min_objs: float, criterion: str):
+    hist = hist_ref[...]                    # (Kb, Ab, B, C)
+    total_w = tw_ref[:, 0]                  # (Kb,)
+    attr_is_cont = cont_ref[0, :]           # (Ab,)
+    n_bins = nbins_ref[0, :]                # (Ab,)
+    score, split_bin = entropy.gains_from_histogram(
+        hist, total_w=total_w, attr_is_cont=attr_is_cont, n_bins=n_bins,
+        min_objs=min_objs, criterion=criterion)
+    score_ref[...] = score
+    bin_ref[...] = split_bin
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("min_objs", "criterion", "block_k", "block_a",
+                     "interpret"))
+def split_gain(
+    hist: jnp.ndarray,          # f32 (K, A, B, C)
+    total_w: jnp.ndarray,       # f32 (K,)
+    attr_is_cont: jnp.ndarray,  # bool (A,)
+    n_bins: jnp.ndarray,        # int32 (A,)
+    *,
+    min_objs: float = 2.0,
+    criterion: str = "gain",
+    block_k: int = 8,
+    block_a: int = 8,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(score, split_bin)`` of shape (K, A); score -inf = invalid."""
+    k, a_dim, b_dim, c_dim = hist.shape
+    pad_k = (-k) % block_k
+    pad_a = (-a_dim) % block_a
+    if pad_k or pad_a:
+        hist = jnp.pad(hist, ((0, pad_k), (0, pad_a), (0, 0), (0, 0)))
+        total_w = jnp.pad(total_w, (0, pad_k))
+        attr_is_cont = jnp.pad(attr_is_cont, (0, pad_a))
+        n_bins = jnp.pad(n_bins, (0, pad_a), constant_values=1)
+    kp, ap = k + pad_k, a_dim + pad_a
+
+    # scalar-ish operands as 2-D rows/cols (TPU wants >= 2-D layouts)
+    tw2 = total_w[:, None]
+    cont2 = attr_is_cont[None, :]
+    nb2 = n_bins[None, :].astype(jnp.int32)
+
+    grid = (kp // block_k, ap // block_a)
+    score, split_bin = pl.pallas_call(
+        functools.partial(_gain_kernel, min_objs=min_objs,
+                          criterion=criterion),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, block_a, b_dim, c_dim),
+                         lambda kb, ab: (kb, ab, 0, 0)),
+            pl.BlockSpec((block_k, 1), lambda kb, ab: (kb, 0)),
+            pl.BlockSpec((1, block_a), lambda kb, ab: (0, ab)),
+            pl.BlockSpec((1, block_a), lambda kb, ab: (0, ab)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_k, block_a), lambda kb, ab: (kb, ab)),
+            pl.BlockSpec((block_k, block_a), lambda kb, ab: (kb, ab)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((kp, ap), jnp.float32),
+            jax.ShapeDtypeStruct((kp, ap), jnp.int32),
+        ),
+        interpret=interpret,
+    )(hist, tw2, cont2, nb2)
+    return score[:k, :a_dim], split_bin[:k, :a_dim]

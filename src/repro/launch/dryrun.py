@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh and record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_9b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out reports/dryrun.json
+
+Success of ``.lower().compile()`` for a cell proves the sharding config is
+coherent (no mismatched collectives, fits compile-time memory accounting);
+failures here are bugs in the framework, not in the run.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import base as cfgbase
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, lower_cell, make_cell
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True, analyze: bool = True) -> dict:
+    """Lower + compile one cell.
+
+    Two artifacts (see utils/scan.py for why):
+      * production (scanned) — the compile proof + memory_analysis;
+      * analysis (unrolled)  — exact flops/bytes/collective accounting,
+        skipped on the multi-pod pass (roofline table is single-pod).
+    """
+    from repro.launch.specs import make_analysis_cells
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+    cell = make_cell(arch, shape_name, mesh)
+    compiled = lower_cell(cell, mesh).compile()
+    t_prod = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    out = dict(status="ok", t_prod_s=round(t_prod, 1),
+               mem_args_gb=mem.argument_size_in_bytes / 1e9,
+               mem_temp_gb=mem.temp_size_in_bytes / 1e9,
+               mem_out_gb=mem.output_size_in_bytes / 1e9)
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_desc}] compile OK {t_prod:.0f}s"
+              f" | memory/device: args {out['mem_args_gb']:.2f} GB"
+              f" temp {out['mem_temp_gb']:.2f} GB")
+
+    if analyze:
+        t0 = time.time()
+        flops = bytes_ = coll = 0.0
+        coll_by_op: dict[str, float] = {}
+        for acell, scale in make_analysis_cells(arch, shape_name, mesh):
+            acomp = lower_cell(acell, mesh, unroll=True).compile()
+            r = rl.analyze(acomp, arch=arch, shape=shape_name,
+                           mesh_desc=mesh_desc, n_devices=mesh.size)
+            flops += scale * r.device_flops
+            bytes_ += scale * r.device_bytes
+            coll += scale * r.device_coll_bytes
+            for k, v in r.coll_by_op.items():
+                coll_by_op[k] = coll_by_op.get(k, 0.0) + scale * v
+        report = rl.Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_desc,
+            device_flops=flops, device_bytes=bytes_, device_coll_bytes=coll,
+            coll_by_op=coll_by_op,
+            peak_mem_bytes=mem.temp_size_in_bytes
+            + mem.argument_size_in_bytes,
+            arg_bytes=mem.argument_size_in_bytes,
+            model_flops=rl.model_flops_for(arch, shape_name))
+        out.update(t_analysis_s=round(time.time() - t0, 1),
+                   **report.as_dict(mesh.size))
+        if verbose:
+            print(f"  costs/device: {flops:.3e} flops, {bytes_:.3e} B, "
+                  f"{coll:.3e} coll B  (unrolled, {out['t_analysis_s']:.0f}s)")
+            print(f"  roofline: compute {report.t_compute*1e3:.2f} ms | "
+                  f"memory {report.t_memory*1e3:.2f} ms | collective "
+                  f"{report.t_collective*1e3:.2f} ms -> {report.bottleneck}"
+                  f" | useful-flops {report.useful_flops_ratio(mesh.size):.2f}")
+    return out
+
+
+def cells_to_run() -> list[tuple[str, str]]:
+    cells = []
+    for arch in cfgbase.ARCH_IDS:
+        if arch == "yadt":
+            cells.append((arch, "train_4k"))
+            continue
+        cfg = cfgbase.get_config(arch)
+        for shape in cfgbase.runnable_shapes(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="compile proof + memory only (multi-pod default)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, "dry-run needs 512 host devices"
+
+    analyze = not (args.no_analysis or args.multi_pod)
+    todo = cells_to_run() if args.all else [(args.arch, args.shape)]
+    results = {}
+    for arch, shape in todo:
+        key = f"{arch}/{shape}"
+        try:
+            results[key] = run_cell(arch, shape, multi_pod=args.multi_pod,
+                                    analyze=analyze)
+        except Exception as e:                        # record, keep going
+            traceback.print_exc()
+            results[key] = dict(status="fail", error=f"{type(e).__name__}: {e}")
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    print(f"\n== {n_ok}/{len(results)} cells OK "
+          f"({'multi-pod 2x16x16' if args.multi_pod else 'single-pod 16x16'})")
+    if n_ok != len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede every other import (jax locks the device count).
+
+"""Perf hillclimbing driver: lower one cell under layout-knob variants and
+diff the roofline terms (the §Perf measure step).
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch llama4_scout \
+      --shape train_4k --knob moe2d
+"""
+
+import argparse
+import json
+import time
+
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import lower_cell, make_analysis_cells, make_cell
+
+
+def measure(arch: str, shape: str, **knobs) -> dict:
+    mesh = make_production_mesh()
+    t0 = time.time()
+    prod = lower_cell(make_cell(arch, shape, mesh), mesh, **knobs).compile()
+    mem = prod.memory_analysis()
+    flops = bytes_ = coll = 0.0
+    by_op: dict[str, float] = {}
+    for acell, scale in make_analysis_cells(arch, shape, mesh):
+        comp = lower_cell(acell, mesh, unroll=True, **knobs).compile()
+        r = rl.analyze(comp, arch=arch, shape=shape, mesh_desc="16x16",
+                       n_devices=mesh.size)
+        flops += scale * r.device_flops
+        bytes_ += scale * r.device_bytes
+        coll += scale * r.device_coll_bytes
+        for k, v in r.coll_by_op.items():
+            by_op[k] = by_op.get(k, 0.0) + scale * v
+    return dict(
+        knobs=knobs,
+        temp_gb=mem.temp_size_in_bytes / 1e9,
+        flops=flops, bytes=bytes_, coll=coll, coll_by_op=by_op,
+        t_compute_ms=flops / rl.PEAK_FLOPS * 1e3,
+        t_memory_ms=bytes_ / rl.HBM_BW * 1e3,
+        t_collective_ms=coll / rl.ICI_BW * 1e3,
+        model_flops=rl.model_flops_for(arch, shape),
+        useful=rl.model_flops_for(arch, shape) / (flops * mesh.size)
+        if flops else 0.0,
+        wall_s=round(time.time() - t0, 1),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--knob", action="append", default=[],
+                    help="knob=value (value parsed as json; bare name=true)")
+    args = ap.parse_args()
+    knobs = {}
+    for k in args.knob:
+        if "=" in k:
+            name, val = k.split("=", 1)
+            knobs[name] = json.loads(val)
+        else:
+            knobs[k] = True
+    out = measure(args.arch, args.shape, **knobs)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline table.
+
+  PYTHONPATH=src python -m repro.launch.report reports/dryrun_single_pod.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        results = json.load(f)
+    lines = [
+        "| arch | shape | compute ms | memory ms | coll ms | bottleneck |"
+        " useful-flops | mem/dev GB |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for key, r in results.items():
+        if r.get("status") != "ok":
+            lines.append(f"| {key.split('/')[0]} | {key.split('/')[1]} |"
+                         f" FAIL | | | {r.get('error', '')[:60]} | | |")
+            continue
+        if "t_compute" not in r:
+            lines.append(
+                f"| {r.get('arch', key.split('/')[0])} |"
+                f" {r.get('shape', key.split('/')[1])} | compile-only |"
+                f" | | | | {r['mem_temp_gb']:.1f} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute'])} |"
+            f" {fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} |"
+            f" {r['bottleneck']} | {r['useful_flops_ratio']:.2f} |"
+            f" {r['mem_temp_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def summarize(path: str) -> str:
+    with open(path) as f:
+        results = json.load(f)
+    ok = [k for k, r in results.items() if r.get("status") == "ok"]
+    fail = [k for k, r in results.items() if r.get("status") != "ok"]
+    out = [f"{len(ok)}/{len(results)} cells OK"]
+    if fail:
+        out.append("failed: " + ", ".join(fail))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    p = sys.argv[1]
+    print(summarize(p))
+    print()
+    print(render(p))

@@ -1,0 +1,66 @@
+"""Serving driver: replicas + WS-scheduled engine over synthetic requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2_9b --reduced \
+      --requests 16 --slots 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base as cfgbase
+from repro.models.model import build_model
+from repro.serve.engine import Replica, Request, ServingEngine
+
+
+def serve(arch: str = "gemma2_9b", *, reduced: bool = True,
+          n_requests: int = 16, n_replicas: int = 1, n_slots: int = 4,
+          max_seq: int = 160, max_new: int = 8, policy: str = "ws",
+          seed: int = 0) -> dict:
+    cfg = cfgbase.get_config(arch)
+    if reduced:
+        cfg = cfgbase.reduced(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+    replicas = [Replica(model, params, n_slots=n_slots, max_seq=max_seq,
+                        seed=seed + i) for i in range(n_replicas)]
+    engine = ServingEngine(replicas, policy=policy)
+
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        plen = int(rng.integers(4, max_seq - max_new - 2))
+        engine.submit(Request(
+            uid=i, prompt=rng.integers(1, cfg.vocab_size, plen
+                                       ).astype(np.int32),
+            max_new_tokens=max_new))
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    n_tokens = sum(len(c.tokens) for c in done)
+    return dict(completed=len(done), tokens=n_tokens, seconds=dt,
+                tok_per_s=n_tokens / dt)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_9b",
+                    choices=list(cfgbase.ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--policy", default="ws", choices=("ws", "drr", "od"))
+    args = ap.parse_args()
+    out = serve(args.arch, reduced=args.reduced, n_requests=args.requests,
+                n_replicas=args.replicas, n_slots=args.slots,
+                policy=args.policy)
+    print(f"{out['completed']} requests, {out['tokens']} tokens in "
+          f"{out['seconds']:.1f}s ({out['tok_per_s']:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Assigned-architecture fleet: composable decoder blocks (dense GQA, MoE,
+RWKV6, RG-LRU) behind one functional model API (see model.build_model)."""

@@ -1,0 +1,46 @@
+"""Modality frontend STUBS (per the assignment brief).
+
+``[vlm]``/``[audio]`` entries specify the transformer *backbone* only; the
+modality frontend supplies precomputed embeddings:
+
+  vision — anyres patch embeddings (B, frontend_tokens, d_model), early-fused
+           into the first ``frontend_tokens`` sequence positions (llava-next
+           style).  A real deployment swaps in the CLIP tower + projector.
+  audio  — EnCodec: the token stream itself *is* the audio codes (musicgen is
+           decoder-only over EnCodec tokens, vocab 2048); an optional frame-
+           embedding tensor is accepted for conditioning stubs.
+
+These helpers only produce test/dry-run inputs with the right shapes/dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embeds_spec(cfg: ModelConfig, batch: int):
+    if not cfg.frontend or not cfg.frontend_tokens:
+        return None
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+
+
+def fake_frontend_embeds(cfg: ModelConfig, batch: int, seed: int = 0):
+    spec = frontend_embeds_spec(cfg, batch)
+    if spec is None:
+        return None
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 0.02, spec.shape), spec.dtype)
+
+
+def mask_frontend_labels(cfg: ModelConfig, labels: jnp.ndarray,
+                         ignore_id: int = -100) -> jnp.ndarray:
+    """Loss-mask the positions occupied by frontend embeddings."""
+    if not cfg.frontend_tokens:
+        return labels
+    n = cfg.frontend_tokens
+    return labels.at[:, :n].set(ignore_id)

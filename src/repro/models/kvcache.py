@@ -1,0 +1,187 @@
+"""Block-kind-aware serving cache + single-token decode step.
+
+Cache layout per layer kind (B = batch, S = max sequence):
+
+  global :  k, v        (B, S, KV, head_dim)    # seq-shardable (flash-decode)
+  local  :  k, v        (B, window, KV, head_dim)  ring buffer, RoPE'd at write
+  rwkv   :  state       (B, H, hd, hd) f32  + token-shift carries (B, D)
+  rglru  :  h (B, W) f32 + conv window (B, conv_width-1, W)
+
+``long_500k`` feasibility comes from this layout: only *global* layers hold
+length-S state, and those are sequence-sharded across the mesh (the
+softmax reductions in ``layers.decode_attention`` become psums under the
+partitioner — distributed flash-decode).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, rglru, rwkv6, transformer
+
+Cache = list[dict[str, jnp.ndarray]]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Cache:
+    dt = jnp.dtype(cfg.dtype)
+    cache: Cache = []
+    for i in range(cfg.n_layers):
+        kind = cfg.block_kind(i)
+        if kind == "global":
+            shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+            cache.append({"k": jnp.zeros(shape, dt),
+                          "v": jnp.zeros(shape, dt)})
+        elif kind == "local":
+            w = min(cfg.window, max_seq)
+            shape = (batch, w, cfg.n_kv_heads, cfg.head_dim)
+            cache.append({"k": jnp.zeros(shape, dt),
+                          "v": jnp.zeros(shape, dt)})
+        elif kind == "rwkv":
+            hd = cfg.d_model // cfg.n_heads
+            cache.append({
+                "state": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+                "tm_prev": jnp.zeros((batch, cfg.d_model), dt),
+                "cm_prev": jnp.zeros((batch, cfg.d_model), dt),
+            })
+        elif kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            cache.append({
+                "h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dt),
+            })
+        else:
+            raise ValueError(kind)
+    return cache
+
+
+def prefill_to_cache(cfg: ModelConfig, entries: list[dict],
+                     cache: Cache, seq_len: int) -> Cache:
+    """Merge forward(capture_cache=True) entries into a fresh cache."""
+    out: Cache = []
+    for i, (entry, slot) in enumerate(zip(entries, cache)):
+        kind = cfg.block_kind(i)
+        if kind == "global":
+            k = jax.lax.dynamic_update_slice(
+                slot["k"], entry["k"].astype(slot["k"].dtype), (0, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                slot["v"], entry["v"].astype(slot["v"].dtype), (0, 0, 0, 0))
+            out.append({"k": k, "v": v})
+        elif kind == "local":
+            w = slot["k"].shape[1]
+            # entry already holds the last `window` tokens; place them so the
+            # ring index (pos % window) lines up with absolute positions.
+            n = entry["k"].shape[1]
+            idx = (jnp.arange(seq_len - n, seq_len)) % w
+            k = slot["k"].at[:, idx].set(entry["k"].astype(slot["k"].dtype))
+            v = slot["v"].at[:, idx].set(entry["v"].astype(slot["v"].dtype))
+            out.append({"k": k, "v": v})
+        elif kind == "rwkv":
+            out.append({"state": entry["state"],
+                        "tm_prev": entry["tm_prev"].astype(slot["tm_prev"].dtype),
+                        "cm_prev": entry["cm_prev"].astype(slot["cm_prev"].dtype)})
+        elif kind == "rglru":
+            out.append({"h": entry["h"].astype(jnp.float32),
+                        "conv": entry["conv"].astype(slot["conv"].dtype)})
+    return out
+
+
+def _decode_attn_layer(lp, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                       slot: dict, pos: jnp.ndarray):
+    """pos: (B,) per-row position (continuous batching)."""
+    spec = transformer.attn_spec(cfg, kind)
+    b = x.shape[0]
+    rows = jnp.arange(b)
+    q, k, v = layers.qkv(lp["attn"], spec, x, pos[:, None])     # (B,1,·,·)
+    if kind == "global":
+        kc = slot["k"].at[rows, pos].set(k[:, 0].astype(slot["k"].dtype),
+                                         mode="drop")
+        vc = slot["v"].at[rows, pos].set(v[:, 0].astype(slot["v"].dtype),
+                                         mode="drop")
+        o = layers.decode_attention(q, kc, vc, pos, spec=spec)
+    else:                                                       # local ring
+        w = slot["k"].shape[1]
+        ring = pos % w
+        kc = slot["k"].at[rows, ring].set(k[:, 0].astype(slot["k"].dtype),
+                                          mode="drop")
+        vc = slot["v"].at[rows, ring].set(v[:, 0].astype(slot["v"].dtype),
+                                          mode="drop")
+        # Valid slots: the last min(pos+1, w) writes.  RoPE is baked in at
+        # write time so ordering within the ring is irrelevant to the math.
+        valid = jnp.arange(w)[None, :] <= jnp.minimum(pos, w - 1)[:, None]
+        o = _ring_attention(q, kc, vc, valid, spec)
+    x_attn = (o.reshape(b, 1, -1) @ lp["attn"]["wo"])
+    return x_attn, {"k": kc, "v": vc}
+
+
+def _ring_attention(q, k_ring, v_ring, valid, spec):
+    """valid: (B, window) mask of live ring slots."""
+    b, _, h, d = q.shape
+    kv = k_ring.shape[2]
+    g = h // kv
+    qg = (q.reshape(b, kv, g, d) / jnp.sqrt(jnp.float32(d))
+          ).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_ring.astype(jnp.float32))
+    if spec.softcap > 0:
+        logits = jnp.tanh(logits / spec.softcap) * spec.softcap
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_ring.astype(jnp.float32))
+    o = o / jnp.sum(p, axis=-1)[..., None]
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def decode_step(params, cfg: ModelConfig, cache: Cache, token: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One serving step: token (B, 1) + cache @ pos -> (logits, new cache).
+
+    ``pos`` is scalar or (B,): per-row positions enable continuous batching
+    (each slot advances at its own sequence index).
+    """
+    b = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    x = jnp.take(params["embed"], token, axis=0)                # (B, 1, D)
+    if cfg.pos == "sinusoidal":
+        x = x + layers.sinusoidal(pos, cfg.d_model)[:, None].astype(x.dtype)
+    new_cache: Cache = []
+    for i, slot in enumerate(cache):
+        lp = transformer.layer_params(params, cfg, i)
+        kind = cfg.block_kind(i)
+        h = layers.norm_apply(lp["norm1"], x, cfg.norm)
+        if kind in ("global", "local"):
+            attn_out, new_slot = _decode_attn_layer(lp, cfg, kind, h, slot,
+                                                    pos)
+            x = x + attn_out
+            y = layers.norm_apply(lp["norm2"], x, cfg.norm)
+            f, _ = transformer._ffn(lp, cfg, y)
+            x = x + f
+        elif kind == "rwkv":
+            spec = transformer.rwkv_spec(cfg)
+            o, state, tm_prev = rwkv6.time_mix_step(
+                lp["tm"], spec, h[:, 0], slot["state"],
+                slot["tm_prev"].astype(h.dtype))
+            x = x + o[:, None]
+            y = layers.norm_apply(lp["norm2"], x, cfg.norm)
+            cm = rwkv6.channel_mix(lp["tm"], spec, y,
+                                   x_prev=slot["cm_prev"].astype(y.dtype))
+            new_slot = {"state": state,
+                        "tm_prev": tm_prev.astype(slot["tm_prev"].dtype),
+                        "cm_prev": y[:, 0].astype(slot["cm_prev"].dtype)}
+            x = x + cm
+        elif kind == "rglru":
+            spec = transformer.rglru_spec(cfg)
+            o, h_new, conv = rglru.rglru_step(
+                lp["rec"], spec, h[:, 0], slot["h"], slot["conv"])
+            x = x + o[:, None]
+            y = layers.norm_apply(lp["norm2"], x, cfg.norm)
+            f, _ = transformer._ffn(lp, cfg, y)
+            x = x + f
+            new_slot = {"h": h_new, "conv": conv}
+        new_cache.append(new_slot)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = transformer.unembed(params, cfg, x)[:, 0]          # (B, V)
+    return logits, new_cache

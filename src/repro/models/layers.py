@@ -1,0 +1,471 @@
+"""Core decoder layers: norms, RoPE, blockwise GQA attention, gated MLP.
+
+Pure-functional style: every layer is an ``init(key, ...) -> params`` plus an
+``apply(params, x, ...)`` pair over plain dict pytrees — no framework
+dependency, fully pjit/shard_map friendly.
+
+Attention is *blockwise* (flash-style online softmax over KV chunks inside a
+``lax.scan``): activation memory is O(S·chunk) instead of O(S²), which is
+what lets the 32k-prefill shapes lower within a v5e's HBM, and it is
+remat-friendly.  Local (sliding-window) masks, GQA, attn-logit softcapping
+(gemma2) and RoPE are all handled here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import scan as uscan
+
+Params = dict[str, Any]
+
+# --------------------------------------------------------------------------
+# initialisation helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def norm_init(d: int, kind: str, dtype) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}        # gemma-style (1+scale)
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def norm_apply(p: Params, x: jnp.ndarray, kind: str,
+               eps: float = 1e-6) -> jnp.ndarray:
+    """Statistics accumulate in f32; the *apply* stays in the input dtype.
+
+    Deliberately avoids ``x.astype(f32)`` on the residual stream: a
+    standalone convert of the layer input lets XLA hoist a whole-stack
+    bf16->f32 convert of the scan-saved carries out of the backward loop
+    (observed +25 GB/device on the phi4 train cell).  The einsum with
+    ``preferred_element_type=f32`` fuses the upcast into the reduction.
+    """
+    d = x.shape[-1]
+    if kind == "rmsnorm":
+        var = jnp.einsum("...d,...d->...", x, x,
+                         preferred_element_type=jnp.float32) / d
+        scale = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+        return x * scale * (1.0 + p["scale"]).astype(x.dtype)
+    mu = (jnp.einsum("...d->...", x,
+                     preferred_element_type=jnp.float32) / d)
+    xc = x - mu[..., None].astype(x.dtype)
+    var = jnp.einsum("...d,...d->...", xc, xc,
+                     preferred_element_type=jnp.float32) / d
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return xc * inv * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary / sinusoidal position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10_000.0) -> jnp.ndarray:
+    """Apply RoPE. x: (B, S, H, D) with even D; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq    # (B, S, half)
+    # cos/sin cast to the stream dtype *before* the multiply: a bf16 x f32
+    # promotion would reintroduce the hoistable whole-tensor convert.
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def sinusoidal(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freq = 10_000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_model: int
+    rope_theta: float = 10_000.0
+    window: int = 0                 # 0 = global causal
+    softcap: float = 0.0            # attention-logit softcap (gemma2)
+    use_rope: bool = True
+    dtype: Any = jnp.bfloat16
+
+
+def attn_init(key, s: AttnSpec) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, s.d_model, s.n_heads * s.head_dim, s.dtype),
+        "wk": dense_init(k2, s.d_model, s.n_kv_heads * s.head_dim, s.dtype),
+        "wv": dense_init(k3, s.d_model, s.n_kv_heads * s.head_dim, s.dtype),
+        "wo": dense_init(k4, s.n_heads * s.head_dim, s.d_model, s.dtype),
+    }
+
+
+def _softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(logits / cap) * cap if cap > 0 else logits
+
+
+def qkv(p: Params, s: AttnSpec, x: jnp.ndarray, positions: jnp.ndarray):
+    from repro.sharding.act import shard_batch
+    b, sq, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, sq, s.n_heads, s.head_dim)
+    k = (x @ p["wk"]).reshape(b, sq, s.n_kv_heads, s.head_dim)
+    v = (x @ p["wv"]).reshape(b, sq, s.n_kv_heads, s.head_dim)
+    q, k, v = shard_batch(q), shard_batch(k), shard_batch(v)
+    if s.use_rope:
+        q = rope(q, positions, s.rope_theta)
+        k = rope(k, positions, s.rope_theta)
+    return q, k, v
+
+
+def _attn_mask(spec: AttnSpec, q_pos, k_pos, sk):
+    mask = q_pos[:, None] >= k_pos[None, :]                  # causal
+    if spec.window > 0:
+        mask &= q_pos[:, None] - k_pos[None, :] < spec.window
+    mask &= (k_pos < sk)[None, :]                            # padding
+    # Barrier: stops XLA from hoisting the *broadcast* mask out of the
+    # (q-block x kv-block) loops as an (nq, nk, B, KV, G, qc, kc) pred stack
+    # (observed 6.4 GB/device in the train-cell backward).
+    return jax.lax.optimization_barrier(mask)
+
+
+def _causal_kv_range(spec: AttnSpec, qi, q_offset, q_chunk: int,
+                     kv_chunk: int, nk: int):
+    """Live KV-block range [lo, hi) for query block qi (causal frontier).
+
+    Skipping fully-masked future blocks halves the S^2 attention work; a
+    sliding window additionally drops blocks older than the window.  Works
+    with traced qi (production fori_loop) and Python-int qi (unrolled
+    analysis — exact triangular flop accounting).
+    """
+    py = isinstance(qi, int)
+    q_end = q_offset + (qi + 1) * q_chunk - 1          # last query position
+    hi = (min(int(q_end) // kv_chunk + 1, nk) if py
+          else jnp.minimum(q_end // kv_chunk + 1, nk))
+    if spec.window > 0:
+        q_start = q_offset + qi * q_chunk
+        lo_val = (q_start - spec.window + 1) // kv_chunk
+        lo = max(int(lo_val), 0) if py else jnp.maximum(lo_val, 0)
+    else:
+        lo = 0 if py else jnp.int32(0)
+    return lo, hi
+
+
+def _flash_fwd(q, k, v, q_offset, *, spec: AttnSpec, q_chunk: int,
+               kv_chunk: int, sk: int):
+    """q: (nq,B,qc,KV,G,D) pre-scaled; k/v: (nk,B,ck,KV,D).
+
+    Returns out (nq,B,qc,KV,G,D) and the per-row softmax stats (m, l).
+    Only KV blocks inside the causal/window frontier are visited.
+    """
+    nq, b, qc, kv, g, d = q.shape
+    nk = k.shape[0]
+
+    def q_step(_, inputs):
+        qi, q_blk = inputs
+        q_pos = jnp.asarray(q_offset) + qi * q_chunk + jnp.arange(qc)
+        qf = q_blk.astype(jnp.float32)
+
+        def kv_body(ci, carry):
+            m, l, acc = carry
+            kci = jax.lax.dynamic_index_in_dim(k, ci, 0, keepdims=False)
+            vci = jax.lax.dynamic_index_in_dim(v, ci, 0, keepdims=False)
+            k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bqkgd,bckd->bkgqc", qf,
+                                kci.astype(jnp.float32))
+            logits = _softcap(logits, spec.softcap)
+            mask = _attn_mask(spec, q_pos, k_pos, sk)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bkgqc,bckd->bkgqd", p,
+                                    vci.astype(jnp.float32)))
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((b, kv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, d), jnp.float32)
+        lo, hi = _causal_kv_range(spec, qi, q_offset, q_chunk,
+                                  kv_chunk, nk)
+        if isinstance(qi, int):                  # unrolled analysis path
+            carry = (m0, l0, a0)
+            for ci in range(int(lo), int(hi)):
+                carry = kv_body(ci, carry)
+            m, l, acc = carry
+        else:
+            m, l, acc = jax.lax.fori_loop(lo, hi, kv_body, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4)                   # (B,qc,KV,G,D)
+        return out.astype(q.dtype), m, l
+
+    if uscan.is_unrolled():
+        parts = [q_step(None, (qi, q[qi])) for qi in range(nq)]
+        out = jnp.stack([p[0] for p in parts])
+        m = jnp.stack([p[1] for p in parts])
+        l = jnp.stack([p[2] for p in parts])
+        return out, m, l
+
+    def q_scan(_, inputs):
+        return None, q_step(None, inputs)
+
+    _, (out, m, l) = jax.lax.scan(q_scan, None, (jnp.arange(nq), q))
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, spec: AttnSpec, q_chunk: int, kv_chunk: int,
+           sk: int, q_offset: int):
+    out, _, _ = _flash_fwd(q, k, v, q_offset, spec=spec, q_chunk=q_chunk,
+                           kv_chunk=kv_chunk, sk=sk)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, spec, q_chunk, kv_chunk, sk, q_offset):
+    out, m, l = _flash_fwd(q, k, v, q_offset, spec=spec, q_chunk=q_chunk,
+                           kv_chunk=kv_chunk, sk=sk)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_vjp_bwd(spec, q_chunk, kv_chunk, sk, q_offset, res, d_out):
+    """FlashAttention-2 backward: recompute p per (q, kv) block.
+
+    Outer loop over KV blocks emits (dk, dv) per block; the inner loop over
+    q blocks accumulates dq in an f32 carry.  No stacked logits survive, and
+    only blocks inside the causal/window frontier are visited (triangular
+    iteration, mirroring the forward).
+    """
+    q, k, v, out, m, l = res
+    nq, b, qc, kv, g, d = q.shape
+    nk = k.shape[0]
+    # D_i = rowsum(dO * O) per query row
+    delta = jnp.einsum("nbqkgd,nbqkgd->nbkgq", d_out.astype(jnp.float32),
+                       out.astype(jnp.float32))              # (nq,B,KV,G,qc)
+    l_safe = jnp.maximum(l, 1e-30)
+
+    def _q_range(ci):
+        """Live q-block range [lo, hi) attending KV block ci."""
+        py = isinstance(ci, int)
+        off = q_offset
+        lo_v = (ci * kv_chunk - off) // q_chunk
+        lo = max(int(lo_v), 0) if py else jnp.maximum(lo_v, 0)
+        if spec.window > 0:
+            hi_v = ((ci + 1) * kv_chunk + spec.window - off - 2
+                    ) // q_chunk + 1
+            hi = min(int(hi_v), nq) if py else jnp.minimum(hi_v, nq)
+        else:
+            hi = nq if py else jnp.int32(nq)
+        return lo, hi
+
+    def kv_step(dq_acc, inp):
+        ci, kci, vci = inp
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        kf = kci.astype(jnp.float32)
+        vf = vci.astype(jnp.float32)
+
+        def q_body(qi, carry):
+            dq_acc, dk, dv = carry
+            idx = lambda a: jax.lax.dynamic_index_in_dim(a, qi, 0,
+                                                         keepdims=False)
+            q_blk, do_blk = idx(q), idx(d_out)
+            m_i, l_i, delta_i = idx(m), idx(l_safe), idx(delta)
+            q_pos = jnp.asarray(q_offset) + qi * q_chunk + jnp.arange(qc)
+            qf = q_blk.astype(jnp.float32)
+            dof = do_blk.astype(jnp.float32)
+            raw = jnp.einsum("bqkgd,bckd->bkgqc", qf, kf)
+            logits = _softcap(raw, spec.softcap)
+            mask = _attn_mask(spec, q_pos, k_pos, sk)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            p = jnp.exp(logits - m_i[..., None]) / l_i[..., None]
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", dof, vf)
+            dlog = p * (dp - delta_i[..., None])
+            if spec.softcap > 0:
+                dlog = dlog * (1.0 - jnp.square(
+                    jnp.tanh(raw / spec.softcap)))
+            dq_blk = jnp.einsum("bkgqc,bckd->bqkgd", dlog, kf)
+            dk_new = dk + jnp.einsum("bkgqc,bqkgd->bckd", dlog, qf)
+            dv_new = dv + jnp.einsum("bkgqc,bqkgd->bckd", p, dof)
+            dq_acc = dq_acc.at[qi].add(dq_blk)
+            return dq_acc, dk_new, dv_new
+
+        dk0 = jnp.zeros((b, kv_chunk, kv, d), jnp.float32)
+        dv0 = jnp.zeros((b, kv_chunk, kv, d), jnp.float32)
+        lo, hi = _q_range(ci)
+        if isinstance(ci, int):                 # unrolled analysis path
+            carry = (dq_acc, dk0, dv0)
+            for qi in range(int(lo), int(hi)):
+                carry = q_body(qi, carry)
+            dq_acc, dk, dv = carry
+        else:
+            dq_acc, dk, dv = jax.lax.fori_loop(lo, hi, q_body,
+                                               (dq_acc, dk0, dv0))
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    if uscan.is_unrolled():
+        dq_acc = dq0
+        dks, dvs = [], []
+        for ci in range(nk):
+            dq_acc, (dk_i, dv_i) = kv_step(dq_acc, (ci, k[ci], v[ci]))
+            dks.append(dk_i)
+            dvs.append(dv_i)
+        dq, dk, dv = dq_acc, jnp.stack(dks), jnp.stack(dvs)
+    else:
+        dq, (dk, dv) = jax.lax.scan(kv_step, dq0,
+                                    (jnp.arange(nk), k, v))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def blockwise_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Sk, KV, D)
+    v: jnp.ndarray,            # (B, Sk, KV, D)
+    *,
+    spec: AttnSpec,
+    q_offset: jnp.ndarray | int = 0,   # absolute position of q[0]
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jnp.ndarray:
+    """Flash attention (fwd: online softmax; bwd: custom-VJP recompute).
+
+    Live logits are one (B, KV, G, qc, kc) f32 block in either direction —
+    this is what lets 32k-token prefill and 4k train cells fit HBM.  GQA
+    folds query heads into (KV, group); causal/local/softcap masks included.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+
+    # Chunk size does not change total attention flops (all blocks are
+    # computed either way), only peak memory — so analysis mode may grow it
+    # to keep the unrolled graph small (see utils/scan.py).
+    q_chunk = uscan.analysis_chunk(q_chunk, sq)
+    kv_chunk = uscan.analysis_chunk(kv_chunk, sk)
+
+    kv_chunk = min(kv_chunk, sk)
+    nk = (sk + kv_chunk - 1) // kv_chunk
+    pad_k = nk * kv_chunk - sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kc = k.reshape(b, nk, kv_chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, kv, d).transpose(1, 0, 2, 3, 4)
+
+    q_chunk = min(q_chunk, sq)
+    nq = (sq + q_chunk - 1) // q_chunk
+    pad_q = nq * q_chunk - sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qc = (q.reshape(b, nq, q_chunk, kv, g, d) * scale
+          ).transpose(1, 0, 2, 3, 4, 5)
+
+    out = _flash(qc, kc, vc, spec, q_chunk, kv_chunk, sk,
+                 int(q_offset))                              # (nq,B,qc,KV,G,D)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq]
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, D)
+    k_cache: jnp.ndarray,      # (B, S, KV, D)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,          # int32 (B,) per-row position of the new token
+    *,
+    spec: AttnSpec,
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    Written as plain reductions over the cache's sequence axis so the SPMD
+    partitioner turns the max/sum into psums when the cache is sequence-
+    sharded (distributed flash-decode; see sharding/partitioning.py).
+    ``pos`` is per batch row (continuous batching: slots at different
+    positions decode in one step).
+    """
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    qg = (q.reshape(b, kv, g, d) / math.sqrt(d)).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(jnp.float32))
+    logits = _softcap(logits, spec.softcap)
+    k_pos = jnp.arange(s)
+    mask = k_pos[None, :] <= pos[:, None]                     # (B, S)
+    if spec.window > 0:
+        mask &= k_pos[None, :] > (pos[:, None] - spec.window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    out = out / jnp.sum(p, axis=-1)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# gated MLP
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    from repro.sharding.act import shard_batch_tp_last
+    a = x @ p["w_gate"]
+    a = shard_batch_tp_last(a)               # (B, S, F): batch x DP, F x TP
+    if act == "silu":
+        a = jax.nn.silu(a.astype(jnp.float32)).astype(x.dtype)
+    elif act == "gelu":
+        a = jax.nn.gelu(a.astype(jnp.float32), approximate=True
+                        ).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    return (a * (x @ p["w_up"])) @ p["w_down"]

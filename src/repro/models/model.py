@@ -1,0 +1,112 @@
+"""Public model API: ``build_model(cfg)`` -> init / loss / prefill / decode.
+
+The loss path uses a *sequence-chunked, vocab-shardable* cross-entropy: the
+(B, S, V) logits tensor is never materialised — per chunk the partial
+logits are (B, chunk, V) with V on the 'model' mesh axis, and the logsumexp
+reduction psums across vocab shards.  With 256k vocabs this is the
+difference between fitting and not fitting HBM at train_4k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import scan as uscan
+
+from repro.configs.base import ModelConfig
+from repro.models import frontends, kvcache, transformer
+
+IGNORE_ID = -100
+
+
+def chunked_cross_entropy(x: jnp.ndarray, unembed_fn: Callable,
+                          labels: jnp.ndarray, *, chunk: int = 512
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over non-ignored tokens, scanning over sequence chunks."""
+    b, s, _ = x.shape
+    chunk = uscan.analysis_chunk(chunk, s)   # flops-invariant (see scan.py)
+    chunk = min(chunk, s)
+    n = s // chunk
+    assert n * chunk == s, "seq_len must divide by the CE chunk"
+    xc = x.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def chunk_loss(xi, li):
+        from repro.sharding.act import shard_batch_tp_last
+        logits = shard_batch_tp_last(
+            unembed_fn(xi).astype(jnp.float32))              # (B, c, V/tp)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        li_safe = jnp.maximum(li, 0)
+        gold = jnp.take_along_axis(logits, li_safe[..., None],
+                                   axis=-1)[..., 0]
+        mask = (li != IGNORE_ID).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    # remat: the backward recomputes each chunk's logits instead of the scan
+    # saving (n_chunks, B, c, V/tp) stacked f32 logits.
+    chunk_loss_r = jax.checkpoint(
+        chunk_loss, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        l, n = chunk_loss_r(*inp)
+        return (tot + l, cnt + n), None
+
+    (tot, cnt), _ = uscan.scan(step, (jnp.float32(0), jnp.float32(0)),
+                               (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[..., tuple[jnp.ndarray, dict]]
+    prefill: Callable[..., tuple[jnp.ndarray, list]]
+    decode_step: Callable[..., tuple[jnp.ndarray, list]]
+    init_cache: Callable[[int, int], list]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def init(key):
+        return transformer.init(key, cfg)
+
+    def loss_fn(params, batch, *, remat: bool = True):
+        tokens = batch["tokens"]
+        labels = frontends.mask_frontend_labels(
+            cfg, batch["labels"], IGNORE_ID)
+        x, _, aux = transformer.forward(
+            params, cfg, tokens, batch.get("frontend_embeds"),
+            capture_cache=False, remat=remat)
+        loss, n_tok = chunked_cross_entropy(
+            x, lambda h: transformer.unembed(params, cfg, h), labels)
+        metrics = dict(loss=loss, n_tokens=n_tok, **aux)
+        if "moe_aux" in aux:
+            loss = loss + 0.01 * aux["moe_aux"]
+        return loss, metrics
+
+    def prefill(params, tokens, frontend_embeds=None, *, max_seq=None):
+        b, s = tokens.shape
+        max_seq = max_seq or s
+        x, entries, _ = transformer.forward(
+            params, cfg, tokens, frontend_embeds, capture_cache=True,
+            remat=False)
+        cache = kvcache.init_cache(cfg, b, max_seq)
+        cache = kvcache.prefill_to_cache(cfg, entries, cache, s)
+        logits = transformer.unembed(params, cfg, x[:, -1:])[:, 0]
+        return logits, cache
+
+    def decode_step(params, cache, token, pos):
+        return kvcache.decode_step(params, cfg, cache, token, pos)
+
+    def init_cache(batch, max_seq):
+        return kvcache.init_cache(cfg, batch, max_seq)
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, prefill=prefill,
+                 decode_step=decode_step, init_cache=init_cache)

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts layer with gather-based dispatch (EP over 'model').
+
+TPU adaptation notes (DESIGN.md §2 pattern — pick the parallelisation grain
+analytically): the GShard one-hot dispatch einsum costs O(T·E·C·D) *counted*
+MXU flops even though it moves one-hot data — it poisons both the roofline
+and the useful-flops ratio.  We instead route with pure data movement:
+
+  1. token top-k over router logits (standard softmax gating);
+  2. per-expert **top-C token selection** on the routing scores — a fixed
+     capacity C = ceil(T·k/E · capacity_factor); overflow tokens are dropped
+     (their combine weight is 0), underflow slots are masked;
+  3. ``take`` gathers (E, C, D) expert inputs, grouped-matmul FFN
+     ``ecd,edf->ecf`` with expert-sharded weights, scatter-add combine.
+
+Expert weights are (E, D, F) with E on the 'model' mesh axis, so the gather
+materialises the all-to-all and the grouped matmul runs expert-parallel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    experts_per_token: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    dtype: Any = jnp.bfloat16
+
+
+def moe_init(key, s: MoESpec) -> Params:
+    kg, k1, k2, k3, ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(s.d_model)
+    p = {
+        "router": (jax.random.normal(kg, (s.d_model, s.n_experts),
+                                     jnp.float32) * scale),   # fp32 router
+        "w_gate": (jax.random.normal(k1, (s.n_experts, s.d_model, s.d_ff),
+                                     jnp.float32) * scale).astype(s.dtype),
+        "w_up": (jax.random.normal(k2, (s.n_experts, s.d_model, s.d_ff),
+                                   jnp.float32) * scale).astype(s.dtype),
+        "w_down": (jax.random.normal(k3, (s.n_experts, s.d_ff, s.d_model),
+                                     jnp.float32) * scale).astype(s.dtype),
+    }
+    if s.n_shared_experts:
+        p["shared"] = layers.mlp_init(
+            ks, s.d_model, s.d_ff * s.n_shared_experts, s.dtype)
+    return p
+
+
+def capacity(n_tokens: int, s: MoESpec) -> int:
+    c = math.ceil(n_tokens * s.experts_per_token / s.n_experts
+                  * s.capacity_factor)
+    return min(max(8, c), n_tokens)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, s: MoESpec
+              ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """x: (B, S, D) -> (out, aux) with load-balancing auxiliary loss."""
+    b, seq, d = x.shape
+    t = b * seq
+    xf = x.reshape(t, d)
+    c = capacity(t, s)
+
+    logits = xf.astype(jnp.float32) @ p["router"]              # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, s.experts_per_token)   # (T, k)
+
+    # combine weight of (token, expert): top-k gate prob, renormalised
+    gate = jnp.zeros((t, s.n_experts), jnp.float32).at[
+        jnp.arange(t)[:, None], top_e].set(
+            top_p / jnp.sum(top_p, axis=-1, keepdims=True))
+
+    # per-expert top-C token selection on the gate score
+    score_te = gate.T                                          # (E, T)
+    sel_score, sel_idx = jax.lax.top_k(score_te, c)            # (E, C)
+    live = sel_score > 0.0                                     # dropped/empty
+
+    from repro.sharding.act import shard_experts
+    xg = jnp.take(xf, sel_idx.reshape(-1), axis=0
+                  ).reshape(s.n_experts, c, d)                 # (E, C, D)
+    xg = shard_experts(jnp.where(live[..., None], xg, 0).astype(s.dtype))
+
+    a = shard_experts(jnp.einsum("ecd,edf->ecf", xg, p["w_gate"]))
+    a = jax.nn.silu(a.astype(jnp.float32)).astype(s.dtype) if s.act == "silu" \
+        else jax.nn.gelu(a.astype(jnp.float32)).astype(s.dtype)
+    h = a * jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+    y = shard_experts(jnp.einsum("ecf,efd->ecd", h, p["w_down"]))  # (E,C,D)
+
+    y = (y.astype(jnp.float32) * sel_score[..., None]
+         * live[..., None])                                    # gate-weighted
+    out = jnp.zeros((t, d), jnp.float32).at[
+        sel_idx.reshape(-1)].add(y.reshape(-1, d), mode="drop")
+
+    if s.n_shared_experts:
+        out = out + layers.mlp_apply(p["shared"], xf, s.act
+                                     ).astype(jnp.float32)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e[:, 0], s.n_experts), axis=0)
+        / t)
+    frac = jnp.sum(jax.nn.one_hot(top_e, s.n_experts), axis=(0, 1)) / (
+        t * s.experts_per_token)
+    aux = s.n_experts * jnp.sum(me * frac)
+    stats = dict(moe_aux=aux,
+                 moe_dropped=1.0 - jnp.mean(live.astype(jnp.float32)))
+    del ce
+    return out.reshape(b, seq, d).astype(x.dtype), stats

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  # data-dependent decay, c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: the linear recurrence is evaluated with
+``jax.lax.associative_scan`` — log-depth tree scan, the canonical way to run
+a diagonal LRU on a systolic machine (vs. the GPU kernel in the paper).
+Wrapped in the Griffin block: causal conv1d(4) on the recurrent branch and a
+GeLU gate branch, merged by elementwise product.
+
+``step`` carries (h, conv window) for O(1) decode — this is why
+recurrentgemma runs the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_model: int
+    lru_width: int
+    conv_width: int = 4
+    dtype: Any = jnp.bfloat16
+
+
+def rglru_init(key, s: RGLRUSpec) -> Params:
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(s.d_model)
+
+    def lin(k, di, do):
+        return (jax.random.normal(k, (di, do), jnp.float32) * scale
+                ).astype(s.dtype)
+
+    # Lambda init so that a^c spreads decays across [0.9, 0.999] (paper)
+    u = jax.random.uniform(ks[0], (s.lru_width,), jnp.float32, 0.9, 0.999)
+    log_lambda = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1
+    return {
+        "w_in": lin(ks[1], s.d_model, s.lru_width),        # recurrent branch
+        "w_gate_branch": lin(ks[2], s.d_model, s.lru_width),
+        "w_out": lin(ks[3], s.lru_width, s.d_model),
+        "conv_w": (jax.random.normal(ks[4], (s.conv_width, s.lru_width),
+                                     jnp.float32) * 0.1).astype(s.dtype),
+        "conv_b": jnp.zeros((s.lru_width,), s.dtype),
+        "wa": lin(ks[5], s.lru_width, s.lru_width),
+        "ba": jnp.zeros((s.lru_width,), jnp.float32),
+        "wx": lin(jax.random.fold_in(key, 7), s.lru_width, s.lru_width),
+        "bx": jnp.zeros((s.lru_width,), jnp.float32),
+        "log_lambda": log_lambda,
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv1d. x: (B, S, W); w: (K, W)."""
+    k = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _gates(p: Params, u: jnp.ndarray):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(uf @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["log_lambda"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * uf)
+    return a, gated
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t over axis 1, log-depth associative scan."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(p: Params, s: RGLRUSpec, x: jnp.ndarray, *,
+                return_state: bool = False):
+    """Full-sequence Griffin recurrent block. x: (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns (h_last, conv_window) for decode.
+    """
+    u = x @ p["w_in"]                                          # (B, S, W)
+    uc = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, gated = _gates(p, uc)
+    h = rglru_scan(a, gated)                                   # (B, S, W)
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32),
+                       approximate=True)
+    out = (h * gate).astype(s.dtype) @ p["w_out"]
+    if return_state:
+        return out, h[:, -1], u[:, -(s.conv_width - 1):]
+    return out
+
+
+def rglru_step(p: Params, s: RGLRUSpec, x: jnp.ndarray,
+               h_prev: jnp.ndarray, conv_state: jnp.ndarray
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) decode step.  x: (B, D); h_prev: (B, W); conv_state (B, K-1, W)."""
+    u = x @ p["w_in"]                                          # (B, W)
+    window = jnp.concatenate([conv_state, u[:, None]], axis=1)  # (B, K, W)
+    uc = jnp.sum(window * p["conv_w"][None], axis=1) + p["conv_b"]
+    a, gated = _gates(p, uc[:, None])
+    h = a[:, 0] * h_prev + gated[:, 0]                         # (B, W)
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32),
+                       approximate=True)
+    out = (h * gate).astype(s.dtype) @ p["w_out"]
+    return out, h, window[:, 1:]

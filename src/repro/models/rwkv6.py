@@ -1,0 +1,201 @@
+"""RWKV-6 "Finch" time-mix block (arXiv:2404.05892) — attention-free LM.
+
+The recurrence per head (state S in R^{d_k x d_v}):
+
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with *data-dependent* per-channel decay  w_t = exp(-exp(ww_t)),
+ww_t = w0 + LoRA(x_t) — the Finch signature — and token-shift mixing on all
+branch inputs.
+
+TPU adaptation: the sequential recurrence is re-blocked into a **chunked
+scan** — within a chunk of L tokens the interaction is a dense (L, L)
+decay-masked matmul (MXU work), across chunks a small state carry flows
+through ``lax.scan``.  This is the standard linear-attention chunking that
+turns an O(S) serial loop into O(S/L) steps of dense compute, and it is the
+reason rwkv6 runs the ``long_500k`` shape with O(1) live state.
+
+``step`` is the O(1) single-token path used by serve/decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import scan as uscan
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVSpec:
+    d_model: int
+    n_heads: int                      # head_dim = d_model // n_heads
+    d_ff: int
+    lora_rank: int = 64
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def rwkv_init(key, s: RWKVSpec) -> Params:
+    ks = jax.random.split(key, 12)
+    d, dt = s.d_model, s.dtype
+    scale = 1.0 / math.sqrt(d)
+
+    def lin(k, di, do):
+        return (jax.random.normal(k, (di, do), jnp.float32) * scale
+                ).astype(dt)
+
+    return {
+        # token-shift mix coefficients per branch (r, k, v, w, g)
+        "mu": jnp.full((5, d), 0.5, dt),
+        "wr": lin(ks[0], d, d), "wk": lin(ks[1], d, d),
+        "wv": lin(ks[2], d, d), "wg": lin(ks[3], d, d),
+        "wo": lin(ks[4], d, d),
+        # decay: w0 + tanh(x A) B   (LoRA on the decay, per channel)
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wa": lin(ks[5], d, s.lora_rank).astype(jnp.float32),
+        "wb": (jax.random.normal(ks[6], (s.lora_rank, d), jnp.float32)
+               * 0.01),
+        "u": jnp.zeros((d,), jnp.float32),      # bonus for current token
+        "ln_out_scale": jnp.ones((s.n_heads, s.head_dim), jnp.float32),
+        # channel-mix (classic RWKV FFN with shift)
+        "cm_mu": jnp.full((2, d), 0.5, dt),
+        "cm_k": lin(ks[7], d, s.d_ff),
+        "cm_v": lin(ks[8], s.d_ff, d),
+        "cm_r": lin(ks[9], d, d),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x_{t-1} along the sequence; ``prev`` seeds position 0 (decode carry)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _branches(p: Params, s: RWKVSpec, x: jnp.ndarray, xs: jnp.ndarray):
+    mu = p["mu"].astype(jnp.float32)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+    mix = [xf * mu[i] + xsf * (1 - mu[i]) for i in range(5)]
+    r = (mix[0].astype(s.dtype) @ p["wr"]).astype(jnp.float32)
+    k = (mix[1].astype(s.dtype) @ p["wk"]).astype(jnp.float32)
+    v = (mix[2].astype(s.dtype) @ p["wv"]).astype(jnp.float32)
+    ww = p["w0"] + jnp.tanh(mix[3] @ p["wa"].astype(jnp.float32)) @ p["wb"]
+    w = jnp.exp(-jnp.exp(ww))                                  # decay in (0,1)
+    g = jax.nn.silu(mix[4].astype(s.dtype) @ p["wg"])
+    return r, k, v, w, g
+
+
+def _heads(x: jnp.ndarray, h: int):
+    b, seq, d = x.shape
+    return x.reshape(b, seq, h, d // h)
+
+
+def time_mix(p: Params, s: RWKVSpec, x: jnp.ndarray, *,
+             chunk: int = 128, return_state: bool = False):
+    """Full-sequence chunked evaluation (training / prefill).
+
+    With ``return_state`` also returns (final_state, last_input) so prefill
+    can seed the O(1) decode path.
+    """
+    b, seq, d = x.shape
+    h, hd = s.n_heads, s.head_dim
+    r, k, v, w, g = _branches(p, s, x, _shift(x))
+    r, k, v, w = (_heads(t, h) for t in (r, k, v, w))          # (B,S,H,hd)
+    u = p["u"].reshape(h, hd)
+
+    chunk = min(chunk, seq)
+    n_chunks = seq // chunk
+    assert n_chunks * chunk == seq, "seq must divide by chunk"
+    shape = (b, n_chunks, chunk, h, hd)
+    rc, kc, vc, wc = (t.reshape(shape).transpose(1, 0, 3, 2, 4)
+                      for t in (r, k, v, w))                   # (N,B,H,L,hd)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=3)                             # prod_{s<=t} w
+    # Clamp the within-chunk log-decay so exp(-cum) cannot overflow f32 when
+    # trained decays get aggressive (log-space subchunking would be exact;
+    # the clamp only bites when a channel forgets >e^30 within one chunk).
+    cum = jnp.maximum(cum, -30.0)
+    # intra-chunk: out_t += sum_{s<t} (r_t * prod_{s<u<=t} w_u) . k_s v_s
+    #   decay(s->t) = exp(cum_t - cum_s - logw_t? ) — state applied *before*
+    #   the bonus: S_{t-1} accumulates k_s v_s decayed by w_{s+1..t-1}... we
+    #   fold via cum_{t-1} - cum_s  =  cum_t - logw_t - cum_s.
+    ct = cum - logw                                            # cum_{t-1}
+
+    def scan_chunk(state, inp):
+        rc_, kc_, vc_, cum_, ct_, logw_ = inp                  # (B,H,L,·)
+        l = rc_.shape[2]
+        # inter-chunk: r_t · (decay(chunk_start->t-1) * S_prev)
+        decay_in = jnp.exp(ct_)                                # (B,H,L,hd)
+        out = jnp.einsum("bhld,bhdv->bhlv", rc_ * decay_in, state)
+        # intra-chunk lower-triangular (s < t)
+        a = jnp.einsum("bhld,bhsd->bhls",
+                       rc_ * jnp.exp(ct_),
+                       kc_ * jnp.exp(-cum_))
+        tri = jnp.tril(jnp.ones((l, l), bool), k=-1)
+        a = jnp.where(tri[None, None], a, 0.0)
+        out = out + jnp.einsum("bhls,bhsv->bhlv", a, vc_)
+        # current-token bonus u
+        out = out + jnp.einsum("bhld,bhld,bhlv->bhlv",
+                               rc_, u[None, :, None, :] * kc_, vc_)
+        # state update to end of chunk:
+        #   S = diag(prod w) S_prev + sum_s decay(s->L) k_s v_s
+        total = cum_[:, :, -1:, :]                             # (B,H,1,hd)
+        state = state * jnp.exp(total.squeeze(2))[..., None] + jnp.einsum(
+            "bhsd,bhsv->bhdv", kc_ * jnp.exp(total - cum_), vc_)
+        return state, out
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    final_state, outs = uscan.scan(scan_chunk, s0,
+                                   (rc, kc, vc, cum, ct, logw))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, seq, h, hd)
+
+    # per-head groupnorm, then output gate + projection
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5) * p["ln_out_scale"]
+    out = out.reshape(b, seq, d).astype(s.dtype) * g
+    out = out @ p["wo"]
+    if return_state:
+        return out, final_state, x[:, -1]
+    return out
+
+
+def time_mix_step(p: Params, s: RWKVSpec, x: jnp.ndarray,
+                  state: jnp.ndarray, x_prev: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) decode step.  x: (B, D); state: (B, H, hd, hd); x_prev: (B, D)."""
+    b, d = x.shape
+    h, hd = s.n_heads, s.head_dim
+    r, k, v, w, g = _branches(p, s, x[:, None], x_prev[:, None])
+    r, k, v, w = (t[:, 0].reshape(b, h, hd) for t in (r, k, v, w))
+    u = p["u"].reshape(h, hd)
+    kv = jnp.einsum("bhd,bhv->bhdv", k, v)
+    out = jnp.einsum("bhd,bhdv->bhv", r, state + u[None, :, :, None] * kv)
+    state = state * w[..., None] + kv
+    mu_ = jnp.mean(out, -1, keepdims=True)
+    var = jnp.var(out, -1, keepdims=True)
+    out = (out - mu_) * jax.lax.rsqrt(var + 1e-5) * p["ln_out_scale"]
+    out = out.reshape(b, d).astype(s.dtype) * g[:, 0]
+    return out @ p["wo"], state, x
+
+
+def channel_mix(p: Params, s: RWKVSpec, x: jnp.ndarray,
+                x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    mu = p["cm_mu"].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xs = _shift(x, None if x_prev is None else x_prev).astype(jnp.float32)
+    xk = (xf * mu[0] + xs * (1 - mu[0])).astype(s.dtype)
+    xr = (xf * mu[1] + xs * (1 - mu[1])).astype(s.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"])

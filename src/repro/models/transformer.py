@@ -1,0 +1,290 @@
+"""Composable decoder stack over heterogeneous block patterns.
+
+One forward implementation serves every assigned architecture: each layer is
+dispatched on its ``block_kind`` (global/local attention, rwkv, rglru), with
+dense-MLP or MoE feed-forward.  Three modes share the same weights:
+
+  mode="train"    full sequence, no cache (loss path; remat per cycle)
+  mode="prefill"  full sequence, writes the serving cache
+  mode="decode"   one token against the cache (see kvcache.decode_step)
+
+**Scan-over-cycles**: layers are grouped into cycles of the architecture's
+``block_pattern`` (e.g. gemma2's (local, global)); parameters of equal
+pattern positions are stacked with a leading ``n_cycles`` axis and the whole
+depth runs under one ``lax.scan``.  The HLO is O(cycle) instead of
+O(n_layers) — this is what keeps the 60-layer/34B dry-run cells compilable —
+and ``jax.checkpoint`` on the cycle body gives per-cycle remat.  Layers that
+do not fill a whole cycle (gemma3: 34 = 5x6 + 4) live in a small unscanned
+``tail``.
+
+Param tree layout:
+
+  {"embed": (V, D), "final_norm": ..., ["lm_head": (D, V)],
+   "scan": tuple_j(stacked layer params, leading dim n_cycles),
+   "tail": tuple(layer params)}
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import scan as uscan
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe, rglru, rwkv6
+from repro.models.layers import AttnSpec
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def attn_spec(cfg: ModelConfig, kind: str) -> AttnSpec:
+    return AttnSpec(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        d_model=cfg.d_model, rope_theta=cfg.rope_theta,
+        window=cfg.window if kind == "local" else 0,
+        softcap=cfg.attn_softcap, use_rope=(cfg.pos == "rope"),
+        dtype=_dtype(cfg))
+
+
+def rwkv_spec(cfg: ModelConfig) -> rwkv6.RWKVSpec:
+    return rwkv6.RWKVSpec(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                          d_ff=cfg.d_ff, dtype=_dtype(cfg))
+
+
+def rglru_spec(cfg: ModelConfig) -> rglru.RGLRUSpec:
+    return rglru.RGLRUSpec(d_model=cfg.d_model,
+                           lru_width=cfg.lru_width or cfg.d_model,
+                           conv_width=cfg.conv_width, dtype=_dtype(cfg))
+
+
+def moe_spec(cfg: ModelConfig) -> moe.MoESpec:
+    return moe.MoESpec(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       n_experts=cfg.n_experts,
+                       experts_per_token=cfg.experts_per_token,
+                       n_shared_experts=cfg.n_shared_experts, act=cfg.act,
+                       dtype=_dtype(cfg))
+
+
+def n_cycles(cfg: ModelConfig) -> tuple[int, int]:
+    p = len(cfg.block_pattern)
+    return cfg.n_layers // p, cfg.n_layers % p
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = _dtype(cfg)
+    lk = jax.random.split(key, 3)
+    lp: Params = {"norm1": layers.norm_init(cfg.d_model, cfg.norm, dt),
+                  "norm2": layers.norm_init(cfg.d_model, cfg.norm, dt)}
+    if kind in ("global", "local"):
+        lp["attn"] = layers.attn_init(lk[0], attn_spec(cfg, kind))
+    elif kind == "rwkv":
+        lp["tm"] = rwkv6.rwkv_init(lk[0], rwkv_spec(cfg))
+    elif kind == "rglru":
+        lp["rec"] = rglru.rglru_init(lk[0], rglru_spec(cfg))
+    else:
+        raise ValueError(kind)
+    if kind != "rwkv":                        # rwkv carries its channel-mix
+        if cfg.is_moe:
+            lp["moe"] = moe.moe_init(lk[1], moe_spec(cfg))
+        else:
+            lp["mlp"] = layers.mlp_init(lk[1], cfg.d_model, cfg.d_ff, dt)
+    return lp
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    pattern = cfg.block_pattern
+    nc, rem = n_cycles(cfg)
+    k_embed, k_head, k_scan, k_tail = jax.random.split(key, 4)
+    p: Params = {
+        "embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(k_head, cfg.d_model,
+                                         cfg.vocab_size, dt)
+
+    def init_cycle(k):
+        ks = jax.random.split(k, len(pattern))
+        return tuple(_init_layer(ks[j], cfg, pattern[j])
+                     for j in range(len(pattern)))
+
+    p["scan"] = (jax.vmap(init_cycle)(jax.random.split(k_scan, nc))
+                 if nc else ())
+    p["tail"] = tuple(
+        _init_layer(jax.random.fold_in(k_tail, j), cfg, pattern[j])
+        for j in range(rem))
+    return p
+
+
+def layer_params(p: Params, cfg: ModelConfig, i: int) -> Params:
+    """Per-layer view into the stacked tree (decode-path access)."""
+    pat = len(cfg.block_pattern)
+    nc, _ = n_cycles(cfg)
+    c, j = divmod(i, pat)
+    if c < nc:
+        return jax.tree.map(lambda a: a[c], p["scan"][j])
+    return p["tail"][j]
+
+
+# --------------------------------------------------------------------------
+# layer body (shared by scan / tail / prefill)
+# --------------------------------------------------------------------------
+
+
+def _ffn(lp: Params, cfg: ModelConfig, x: jnp.ndarray
+         ) -> tuple[jnp.ndarray, dict]:
+    if "moe" in lp:
+        return moe.moe_apply(lp["moe"], x, moe_spec(cfg))
+    return layers.mlp_apply(lp["mlp"], x, cfg.act), {}
+
+
+def _layer_full(lp: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, kind: str, capture: bool):
+    """One decoder layer over the full sequence; optionally capture state."""
+    aux: dict[str, jnp.ndarray] = {}
+    cache_entry: dict[str, jnp.ndarray] = {}
+    h = layers.norm_apply(lp["norm1"], x, cfg.norm)
+    if kind in ("global", "local"):
+        spec = attn_spec(cfg, kind)
+        q, k, v = layers.qkv(lp["attn"], spec, h, positions)
+        o = layers.blockwise_attention(q, k, v, spec=spec, q_offset=0)
+        x = x + (o.reshape(*o.shape[:2], -1) @ lp["attn"]["wo"])
+        if capture:
+            from repro.sharding.act import shard_kv_capture
+            if kind == "local":
+                w = min(cfg.window, k.shape[1])
+                cache_entry = {"k": k[:, -w:], "v": v[:, -w:]}
+            else:
+                cache_entry = {"k": shard_kv_capture(k),
+                               "v": shard_kv_capture(v)}
+        y = layers.norm_apply(lp["norm2"], x, cfg.norm)
+        f, aux = _ffn(lp, cfg, y)
+        x = x + f
+    elif kind == "rwkv":
+        if capture:
+            o, state, x_last = rwkv6.time_mix(
+                lp["tm"], rwkv_spec(cfg), h, return_state=True)
+        else:
+            o = rwkv6.time_mix(lp["tm"], rwkv_spec(cfg), h)
+        x = x + o
+        y = layers.norm_apply(lp["norm2"], x, cfg.norm)
+        x = x + rwkv6.channel_mix(lp["tm"], rwkv_spec(cfg), y)
+        if capture:
+            cache_entry = {"state": state, "tm_prev": x_last,
+                           "cm_prev": y[:, -1]}
+    elif kind == "rglru":
+        if capture:
+            o, h_last, conv = rglru.rglru_apply(
+                lp["rec"], rglru_spec(cfg), h, return_state=True)
+            cache_entry = {"h": h_last, "conv": conv}
+        else:
+            o = rglru.rglru_apply(lp["rec"], rglru_spec(cfg), h)
+        x = x + o
+        y = layers.norm_apply(lp["norm2"], x, cfg.norm)
+        f, aux = _ffn(lp, cfg, y)
+        x = x + f
+    return x, cache_entry, aux
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(p: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 frontend_embeds: jnp.ndarray | None = None) -> jnp.ndarray:
+    from repro.sharding.act import shard_batch
+    x = shard_batch(jnp.take(p["embed"], tokens, axis=0))
+    if cfg.pos == "sinusoidal":
+        pos = jnp.arange(tokens.shape[1])
+        x = x + layers.sinusoidal(pos, cfg.d_model)[None].astype(x.dtype)
+    if frontend_embeds is not None and cfg.frontend_tokens:
+        n = cfg.frontend_tokens
+        x = jnp.concatenate(
+            [frontend_embeds[:, :n].astype(x.dtype), x[:, n:]], axis=1)
+    return x
+
+
+def forward(p: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: jnp.ndarray | None = None, *,
+            capture_cache: bool = False, remat: bool = True):
+    """Full-sequence forward.  Returns (hidden, cache_entries, aux).
+
+    ``cache_entries`` is a per-layer list in layer order (prefill only).
+    """
+    pattern = cfg.block_pattern
+    nc, rem = n_cycles(cfg)
+    x = embed_tokens(p, cfg, tokens, frontend_embeds)
+    positions = jnp.arange(tokens.shape[1])
+
+    def cycle(x, cp):
+        from repro.sharding.act import shard_batch
+        x = shard_batch(x)                  # re-anchor DP through the scan
+        entries, auxes = [], []
+        for j, kind in enumerate(pattern):
+            x, e, a = _layer_full(cp[j], x, positions, cfg, kind,
+                                  capture_cache)
+            entries.append(e)
+            auxes.append(a)
+        return shard_batch(x), (tuple(entries), tuple(auxes))
+
+    # prevent_cse=False: scan already provides the CSE barrier; without it
+    # XLA hoists whole-stack dtype converts out of the backward loop
+    # (empirically a 2x temp-memory regression).
+    cycle_fn = jax.checkpoint(
+        cycle, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False) if remat else cycle
+
+    stacked_entries = None
+    stacked_aux: tuple = ()
+    if nc:
+        x, (stacked_entries, stacked_aux) = uscan.scan(
+            cycle_fn, x, p["scan"])
+
+    entries: list[dict] = []
+    if capture_cache and stacked_entries is not None:
+        for c in range(nc):
+            for j in range(len(pattern)):
+                entries.append(jax.tree.map(lambda a, c=c: a[c],
+                                            stacked_entries[j]))
+
+    auxes: list[dict] = []
+    for a in stacked_aux:
+        if a:
+            auxes.append({k: jnp.mean(v) for k, v in a.items()})
+
+    for j in range(rem):
+        x, e, a = _layer_full(p["tail"][j], x, positions, cfg, pattern[j],
+                              capture_cache)
+        if capture_cache:
+            entries.append(e)
+        if a:
+            auxes.append(a)
+
+    x = layers.norm_apply(p["final_norm"], x, cfg.norm)
+    aux = {}
+    if auxes:
+        aux = {k: jnp.mean(jnp.stack([a[k] for a in auxes]))
+               for k in auxes[0]}
+    return x, entries, aux
+
+
+def unembed(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = x @ w
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits

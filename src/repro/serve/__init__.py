@@ -1,0 +1,1 @@
+"""Serving substrate: slot-batched engine + WS request scheduling."""

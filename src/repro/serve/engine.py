@@ -1,0 +1,176 @@
+"""Slot-batched serving engine with the paper's WS request scheduling.
+
+The paper's farm is applied here as a *runtime feature* (DESIGN.md §5): a
+fleet of model replicas is a farm; requests are tasks whose weight is the
+prompt length (the serving analogue of weight = r cases at a node); the
+emitter assigns each request to the replica with the least outstanding
+weighted work — FastFlow's ``ws_scheduler`` verbatim, from
+:mod:`repro.core.scheduler`.
+
+Each replica runs **continuous batching** over a fixed number of cache
+slots: one jitted ``decode_step`` advances every active slot per tick;
+prompts are prefilled into free slots (batch-1 prefill merged into the slot
+axis); finished sequences free their slot immediately.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import Policy, QueueState, make_policy
+from repro.models.model import Model
+from repro.serve.sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+    @property
+    def weight(self) -> float:
+        return float(len(self.prompt) + self.max_new_tokens)
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: list[int]
+
+
+class Replica:
+    """One model replica: fixed slot batch + shared cache."""
+
+    def __init__(self, model: Model, params: Any, *, n_slots: int,
+                 max_seq: int, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(n_slots, max_seq)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.pos = np.zeros(n_slots, np.int64)            # next write index
+        self.remaining = np.zeros(n_slots, np.int64)
+        self.active = np.zeros(n_slots, bool)
+        self.uid = np.full(n_slots, -1, np.int64)
+        self.out: dict[int, list[int]] = {}
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, max_seq=max_seq))
+
+    # -- WorkerView for the WS policy ---------------------------------------
+    def queue_len(self) -> int:
+        return int(self.active.sum())
+
+    def queued_weight(self) -> float:
+        return float(self.remaining[self.active].sum())
+
+    def capacity(self) -> int:
+        return self.n_slots
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, req: Request) -> None:
+        free = np.flatnonzero(~self.active)
+        if not free.size:
+            raise RuntimeError("no free slot (scheduler bug)")
+        s = int(free[0])
+        logits, cache1 = self._prefill(self.params,
+                                       jnp.asarray(req.prompt)[None])
+        # splice the batch-1 prefill cache into slot s of the shared cache
+        self.cache = jax.tree.map(
+            lambda big, one: big.at[s:s + 1].set(one.astype(big.dtype)),
+            self.cache, _pad_cache_seq(cache1, self.cache))
+        tok = int(jnp.argmax(logits, -1)[0])
+        self.tokens = self.tokens.at[s, 0].set(tok)
+        self.pos[s] = len(req.prompt)
+        self.remaining[s] = req.max_new_tokens - 1
+        self.active[s] = True
+        self.uid[s] = req.uid
+        self.out[req.uid] = [tok]
+
+    # -- one decode tick over all active slots -------------------------------
+    def tick(self) -> list[Completion]:
+        if not self.active.any():
+            return []
+        # Per-slot positions: every active slot advances at its own index
+        # (continuous batching); the decode step masks per row.
+        pos_vec = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.tokens, pos_vec)
+        self.key, sub = jax.random.split(self.key)
+        nxt = np.asarray(sample(logits, sub))
+        done: list[Completion] = []
+        for s in range(self.n_slots):
+            if not self.active[s]:
+                continue
+            tok = int(nxt[s])
+            self.out[int(self.uid[s])].append(tok)
+            self.pos[s] += 1
+            self.remaining[s] -= 1
+            if self.remaining[s] <= 0 or self.pos[s] >= self.max_seq - 1:
+                done.append(Completion(int(self.uid[s]),
+                                       self.out.pop(int(self.uid[s]))))
+                self.active[s] = False
+                self.uid[s] = -1
+        self.tokens = jnp.asarray(nxt[:, None], jnp.int32)
+        return done
+
+
+def _pad_cache_seq(cache_small: list, cache_big: list) -> list:
+    """Zero-pad a prefill cache (seq = prompt len) to the slot cache shape."""
+    out = []
+    for small, big in zip(cache_small, cache_big):
+        slot = {}
+        for k, v in small.items():
+            tgt = big[k].shape[1:]
+            pads = [(0, t - s) for s, t in zip(v.shape[1:], tgt)]
+            slot[k] = jnp.pad(v, [(0, 0)] + pads)
+        out.append(slot)
+    return out
+
+
+class ServingEngine:
+    """Front door: WS-scheduled admission over a fleet of replicas."""
+
+    def __init__(self, replicas: list[Replica], *,
+                 policy: str | Policy = "ws"):
+        self.replicas = replicas
+        self.policy = policy if isinstance(policy, Policy) \
+            else make_policy(policy)
+        self.backlog: deque[Request] = deque()
+        self.completed: list[Completion] = []
+
+    def submit(self, req: Request) -> None:
+        self.backlog.append(req)
+
+    def _admit_backlog(self) -> None:
+        while self.backlog:
+            views = [QueueState(tasks=r.queue_len(),
+                                weight=r.queued_weight(),
+                                cap=r.capacity()) for r in self.replicas]
+            i = self.policy.pick(self.backlog[0].weight, views)
+            if i is None:
+                return                       # every replica full
+            self.replicas[i].admit(self.backlog.popleft())
+
+    def run_until_drained(self, *, max_ticks: int = 10_000
+                          ) -> list[Completion]:
+        for _ in range(max_ticks):
+            self._admit_backlog()
+            busy = False
+            for r in self.replicas:
+                done = r.tick()
+                self.completed.extend(done)
+                busy |= r.queue_len() > 0
+            if not busy and not self.backlog:
+                break
+        return self.completed

@@ -1,0 +1,1 @@
+"""Sharding rules: logical-axis partitioning for params/batches/caches."""

@@ -1,0 +1,124 @@
+"""Activation sharding constraints (propagation anchors).
+
+XLA's sharding propagation loses the batch axis through scan+remat+gather
+chains (empirically: the phi4 train cell replicated (B, S, d_ff) activations
+and all-gathered 34 GB per layer).  Production frameworks pin activations
+explicitly; these helpers are the pin points used inside the model code.
+
+The active mesh geometry is process-global, set by the launch layer
+(``specs.lower_cell``) via :func:`activation_sharding`, so model code stays
+mesh-agnostic; with no context active every helper is a no-op (pure-CPU
+unit tests).  Axes are applied only when the dimension is divisible — e.g.
+batch 1 at ``long_500k`` simply stays replicated.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"dp": ("data",), "tp": "model", "dp_size": 1, "tp_size": 1,
+          "enabled": False,
+          # --- layout knobs (hillclimbed; see EXPERIMENTS.md §Perf) -------
+          "moe2d": False,    # shard MoE capacity axis over DP
+          "yadt_rs": True,   # reduce-scatter the frontier histogram over K (confirmed win)
+          "kv_seq_shard": False,  # capture prefill KV seq-sharded over TP
+          }
+
+
+@contextlib.contextmanager
+def activation_sharding(dp: Sequence[str], dp_size: int,
+                        tp: str = "model", tp_size: int = 1, **knobs):
+    old = dict(_STATE)
+    _STATE.update(dp=tuple(dp), tp=tp, dp_size=int(dp_size),
+                  tp_size=int(tp_size), enabled=True, **knobs)
+    try:
+        yield
+    finally:
+        _STATE.clear()
+        _STATE.update(old)
+
+
+def from_mesh(mesh, **knobs):
+    from repro.sharding import partitioning as part
+    dp = part.batch_axes(mesh)
+    return activation_sharding(
+        dp, part.axis_size(mesh, dp), "model",
+        mesh.shape.get("model", 1), **knobs)
+
+
+def _constrain(x, spec: P):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x     # no mesh in scope
+
+
+def _dp_for(dim: int):
+    return _STATE["dp"] if dim % max(_STATE["dp_size"], 1) == 0 else None
+
+
+def _tp_for(dim: int):
+    return _STATE["tp"] if dim % max(_STATE["tp_size"], 1) == 0 else None
+
+
+def shard_batch(x):
+    """Pin dim0 = batch to the DP axes; other dims replicated."""
+    if not _STATE["enabled"]:
+        return x
+    return _constrain(x, P(_dp_for(x.shape[0]),
+                           *([None] * (x.ndim - 1))))
+
+
+def shard_batch_tp_last(x):
+    """Pin (batch, ..., feature): batch to DP, last dim to TP."""
+    if not _STATE["enabled"]:
+        return x
+    return _constrain(x, P(_dp_for(x.shape[0]),
+                           *([None] * (x.ndim - 2)),
+                           _tp_for(x.shape[-1])))
+
+
+def shard_frontier_hist(x):
+    """(K, A, B+1, C) frontier histogram.
+
+    Baseline: replicated (segment-sum partials all-reduced everywhere —
+    the NAP splitPost barrier as one fat collective).  With ``yadt_rs``
+    (hillclimbed): slot axis K sharded over TP — the partials are
+    reduce-scattered (half the volume of an all-reduce) and the gain scan
+    + argmax run K-sharded; only the per-slot decisions (a few ints per
+    node) are gathered for case routing.
+    """
+    if not (_STATE["enabled"] and _STATE["yadt_rs"]):
+        return x
+    return _constrain(x, P(_tp_for(x.shape[0]),
+                           *([None] * (x.ndim - 1))))
+
+
+def shard_kv_capture(x):
+    """Prefill-captured KV (B, S, KV, hd): seq over TP under kv_seq_shard
+    (matches the serving cache layout => no reshard, 1/tp the footprint)."""
+    if not (_STATE["enabled"] and _STATE["kv_seq_shard"]):
+        return x
+    return _constrain(x, P(_dp_for(x.shape[0]), _tp_for(x.shape[1]),
+                           None, None))
+
+
+def shard_experts(x):
+    """Pin (E, C, ...) expert-major tensors.
+
+    Baseline (paper-faithful EP): E over TP only — each expert's capacity
+    batch is computed whole on its model shard, so per-device expert flops
+    divide by tp only (measured 16x useful-flops loss on the MoE cells).
+    With the ``moe2d`` knob (hillclimbed default): capacity additionally
+    shards over DP — per-device flops divide by the full mesh.
+    """
+    if not _STATE["enabled"]:
+        return x
+    dims = [_tp_for(x.shape[0])] + [None] * (x.ndim - 1)
+    if _STATE["moe2d"] and x.ndim >= 2:
+        dims[1] = _dp_for(x.shape[1])
+    return _constrain(x, P(*dims))

@@ -1,0 +1,193 @@
+"""Partitioning rules: DP / TP / EP / SP over the production mesh.
+
+Baseline layout (the paper-faithful starting point for §Perf; hillclimbed
+variants live behind ``layout=``):
+
+  * **data axis (+ pod axis when multi-pod)** — batch dimension of every
+    activation (pure DP across pods, DP within a pod).
+  * **model axis** — tensor parallelism where divisibility is universal
+    across the fleet: d_ff (Megatron MLP), vocab (parallel unembed + CE),
+    experts (EP: 16 experts over 16-way model axis), and the fused
+    ``heads*head_dim`` projection columns.
+  * **ZeRO-3 storage** — every >=2-D parameter additionally shards its first
+    dimension over the data axis; XLA materialises the all-gather before use
+    and the reduce-scatter on the gradient (both visible in the collective
+    roofline term).
+  * **SP for serving** — decode-shape KV caches shard the *sequence* axis
+    over the model axis (and over data too at batch 1); the plain-reduction
+    attention in ``layers.decode_attention`` then compiles to a distributed
+    flash-decode (partial max/sum + psum).
+
+Only parameters and step inputs/outputs are constrained; intermediate
+shardings are left to the SPMD partitioner (constraint points documented in
+DESIGN.md §8 are added where propagation is known to go wrong).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+# --------------------------------------------------------------------------
+# mesh helpers
+# --------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch dimension (pod DP + in-pod DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(mesh: Mesh, dim: int, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    """True for scan-over-cycles parameters: leading dim = n_cycles."""
+    return any(isinstance(e, jax.tree_util.DictKey) and str(e.key) == "scan"
+               for e in path)
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, zero3: bool = True) -> P:
+    """PartitionSpec for one parameter leaf (see module docstring)."""
+    if _is_stacked(path):
+        # dim0 is the layer-stack axis (scan slices it): replicate it and
+        # apply the per-layer rules to the remaining dims.
+        inner = param_pspec(
+            [e for e in path
+             if not (isinstance(e, jax.tree_util.DictKey)
+                     and str(e.key) == "scan")],
+            jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype), mesh,
+            zero3=zero3)
+        return P(None, *inner)
+    name = _leaf_name(path)
+    shape = leaf.shape
+    nd = len(shape)
+    dp = "data" if (zero3 and "data" in mesh.axis_names) else None
+
+    if nd <= 1:
+        return P()
+    if name == "embed":                       # (V, D)
+        return P("model" if _fits(mesh, shape[0], "model") else None,
+                 dp if _fits(mesh, shape[1], dp) else None)
+    if name == "lm_head":                     # (D, V)
+        return P(dp if _fits(mesh, shape[0], dp) else None,
+                 "model" if _fits(mesh, shape[1], "model") else None)
+    if name == "router":
+        return P(None, None)
+    if nd == 3:                               # expert weights (E, ·, ·)
+        e_ok = _fits(mesh, shape[0], "model")
+        d_ok = _fits(mesh, shape[1], dp)
+        return P("model" if e_ok else None, dp if d_ok else None, None)
+    # generic 2-D: ZeRO-3 on dim0, TP on dim1
+    d0 = dp if _fits(mesh, shape[0], dp) else None
+    d1 = "model" if _fits(mesh, shape[1], "model") else None
+    return P(d0, d1)
+
+
+def param_shardings(param_tree: Any, mesh: Mesh, *, zero3: bool = True):
+    """Map a (shape-)pytree of params to NamedShardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_pspec(path, leaf, mesh, zero3=zero3)),
+        param_tree)
+
+
+# --------------------------------------------------------------------------
+# step input / output rules
+# --------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, batch_tree: Any):
+    """Batch dict (tokens/labels/frontend_embeds): batch dim over DP axes."""
+    dp = batch_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        first = dp if b % axis_size(mesh, dp) == 0 else (
+            "data" if b % axis_size(mesh, "data") == 0 else None)
+        return NamedSharding(mesh, P(first, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def cache_pspec(cfg: ModelConfig, mesh: Mesh, layer: int,
+                field: str, shape: tuple[int, ...], *, long: bool) -> P:
+    """Serving-cache sharding: SP on global-KV sequence, DP on batch."""
+    kind = cfg.block_kind(layer)
+    dp = batch_axes(mesh)
+    b = shape[0]
+    b_axes = dp if b % axis_size(mesh, dp) == 0 else (
+        "data" if b % axis_size(mesh, "data") == 0 else None)
+
+    if kind == "global" and field in ("k", "v"):
+        seq_axes: Any = "model"
+        if b_axes is None:                    # batch 1: give seq both axes
+            seq_axes = tuple(a for a in ("pod", "data", "model")
+                             if a in mesh.axis_names)
+        if shape[1] % axis_size(mesh, seq_axes) == 0:
+            return P(b_axes, seq_axes, None, None)
+        return P(b_axes, None, None, None)
+    if kind == "local" and field in ("k", "v"):
+        return P(b_axes, None, None, None)
+    if kind == "rwkv" and field == "state":
+        h_ok = shape[1] % axis_size(mesh, "model") == 0
+        return P(b_axes, "model" if h_ok else None, None, None)
+    if kind == "rglru":
+        if field == "h":
+            w_ok = shape[1] % axis_size(mesh, "model") == 0
+            return P(b_axes, "model" if w_ok else None)
+        if field == "conv":
+            w_ok = shape[2] % axis_size(mesh, "model") == 0
+            return P(b_axes, None, "model" if w_ok else None)
+    # token-shift carries etc.
+    return P(b_axes, *([None] * (len(shape) - 1)))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree: list,
+                    *, long: bool = False):
+    out = []
+    for i, slot in enumerate(cache_tree):
+        out.append({
+            f: NamedSharding(mesh, cache_pspec(cfg, mesh, i, f, v.shape,
+                                               long=long))
+            for f, v in slot.items()})
+    return out
+
+
+def logits_sharding(cfg: ModelConfig, mesh: Mesh, batch: int):
+    dp = batch_axes(mesh)
+    b_axes = dp if batch % axis_size(mesh, dp) == 0 else (
+        "data" if batch % axis_size(mesh, "data") == 0 else None)
+    v_ok = cfg.vocab_size % axis_size(mesh, "model") == 0
+    return NamedSharding(mesh, P(b_axes, "model" if v_ok else None))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,149 @@
+"""Fault-tolerant checkpointing: atomic, integrity-tagged, mesh-agnostic.
+
+Design for 1000+ nodes (DESIGN.md §9):
+
+  * **Mesh-agnostic layout** — leaves are written *unsharded* with their
+    tree paths as keys, so a checkpoint saved on a (16,16) mesh restores
+    onto a (2,16,16) or any elastic replan; re-sharding happens at
+    ``device_put`` with the target shardings.  (On a real pod each host
+    writes only its shard slice + a partition manifest; the gather-based
+    writer here keeps the same on-disk contract.)
+  * **Atomicity** — write to ``<dir>/tmp.<step>`` then ``os.replace``; a
+    crash mid-write never corrupts the latest checkpoint.
+  * **Integrity** — per-leaf CRC32 in ``manifest.json``; ``latest_valid``
+    skips checkpoints that fail verification (torn writes on shared FS).
+  * **Async** — ``save(..., blocking=False)`` snapshots to host memory
+    synchronously (consistency point) and writes in a daemon thread, off
+    the step critical path.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import threading
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_SAVE_SEQ = itertools.count()
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    """bf16 & friends are not npy-native: store raw bytes, dtype in manifest."""
+    if arr.dtype.kind in "biufc?":
+        return arr
+    return np.ascontiguousarray(arr).view(np.uint8)
+
+
+def _from_storable(arr: np.ndarray, dtype: str, shape) -> np.ndarray:
+    target = np.dtype(jnp.dtype(dtype))
+    if arr.dtype == target:
+        return arr.reshape(shape)
+    return arr.view(target).reshape(shape)
+
+
+def save(directory: str, step: int, tree: Any, *, extra: dict | None = None,
+         blocking: bool = True) -> str:
+    """Write checkpoint ``<directory>/step_<step>``; returns its path."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)   # synchronous snapshot = consistency point
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = os.path.join(directory,
+                       f"tmp.{step}.{os.getpid()}.{next(_SAVE_SEQ)}")
+
+    def write():
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+        for key, arr in flat.items():
+            fn = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), _to_storable(arr))
+            manifest["leaves"][key] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            import shutil
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+
+    if blocking:
+        write()
+    else:
+        threading.Thread(target=write, daemon=True).start()
+    return final
+
+
+def verify(path: str) -> bool:
+    try:
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+        for key, meta in manifest["leaves"].items():
+            arr = _from_storable(np.load(os.path.join(path, meta["file"])),
+                                 meta["dtype"], meta["shape"])
+            if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
+                return False
+        return True
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
+
+
+def latest_valid(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted((d for d in os.listdir(directory)
+                    if d.startswith("step_")), reverse=True)
+    for d in steps:
+        path = os.path.join(directory, d)
+        if verify(path):
+            return path
+    return None
+
+
+def restore(path: str, like: Any, *, shardings: Any | None = None) -> Any:
+    """Rebuild the pytree of ``like`` (a template/state) from ``path``.
+
+    ``shardings``: optional matching pytree of NamedShardings — this is the
+    elastic-rescale hook: restore onto any mesh regardless of the mesh the
+    checkpoint was written from.
+    """
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths_and_leaves))
+    out = []
+    for (path_elems, leaf), sh in zip(paths_and_leaves, shard_leaves):
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in path_elems)
+        meta = manifest["leaves"][key]
+        arr = _from_storable(np.load(os.path.join(path, meta["file"])),
+                             meta["dtype"], meta["shape"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def manifest_step(path: str) -> int:
+    with open(os.path.join(path, _MANIFEST)) as f:
+        return int(json.load(f)["step"])

@@ -1,0 +1,127 @@
+"""Elastic scaling, failure detection and straggler mitigation (host plane).
+
+At 1000+ nodes, three control-plane mechanisms keep a run alive:
+
+  * :class:`HeartbeatMonitor` — hosts report liveness; a host silent for
+    ``timeout`` seconds is declared failed.  The driver reacts by draining
+    the step, checkpointing (or falling back to the last valid checkpoint),
+    and replanning the mesh without the lost hosts.
+  * :func:`plan_mesh` — given the surviving chip count, pick the largest
+    coherent (pod, data, model) grid that preserves the TP anchor (model=16,
+    the divisibility the whole fleet's layouts are built on) — elastic
+    *data*-parallel width, fixed *model* width.
+  * :class:`StragglerMonitor` — per-step durations; hosts slower than
+    ``factor`` x the running median get flagged.  Host-side work (data
+    shards, eval requests) is rebalanced through the paper's own WS policy
+    (the YaDT-FF weighted scheduler — see core/scheduler.py), which is
+    exactly a straggler-aware least-loaded assignment.
+
+The SPMD step itself is gang-scheduled: failures surface as collective
+timeouts; the driver loop in ``launch/train.py`` wires these pieces to
+checkpoint/restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Sequence
+
+from repro.core.scheduler import WS, QueueState
+
+TP_ANCHOR = 16   # model-axis width the fleet's divisibility is built on
+
+
+@dataclasses.dataclass
+class HostState:
+    last_seen: float
+    step: int = -1
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
+        self.hosts: dict[str, HostState] = {}
+
+    def beat(self, host: str, step: int = -1,
+             now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        self.hosts[host] = HostState(last_seen=now, step=step)
+
+    def failed(self, now: float | None = None) -> list[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, s in self.hosts.items()
+                if now - s.last_seen > self.timeout]
+
+    def alive(self, now: float | None = None) -> list[str]:
+        bad = set(self.failed(now))
+        return [h for h in self.hosts if h not in bad]
+
+
+def plan_mesh(n_chips: int, *, chips_per_pod: int = 256,
+              model: int = TP_ANCHOR) -> tuple[tuple[int, ...],
+                                               tuple[str, ...]]:
+    """Largest usable (pod, data, model) grid for the surviving chips.
+
+    Keeps model = TP_ANCHOR fixed (layout anchor), scales data width down to
+    what the survivors support; multi-pod only when whole pods survive.
+    """
+    if n_chips < model:
+        raise ValueError(f"need at least {model} chips, have {n_chips}")
+    pods = n_chips // chips_per_pod
+    if pods >= 2:
+        usable_pods = pods
+        data = chips_per_pod // model
+        return (usable_pods, data, model), ("pod", "data", "model")
+    data = n_chips // model
+    return (data, model), ("data", "model")
+
+
+def rebatch_for_mesh(global_batch: int, mesh_shape: Sequence[int],
+                     axes: Sequence[str]) -> int:
+    """Nearest feasible global batch for a replanned mesh (keeps per-replica
+    batch constant: elastic batch scaling)."""
+    dp = 1
+    for n, a in zip(mesh_shape, axes):
+        if a in ("pod", "data"):
+            dp *= n
+    per_replica = max(1, global_batch // dp)
+    return per_replica * dp
+
+
+class StragglerMonitor:
+    """Flags hosts whose recent step times exceed factor x fleet median."""
+
+    def __init__(self, factor: float = 1.5, window: int = 16):
+        self.factor = factor
+        self.times: dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def record(self, host: str, seconds: float) -> None:
+        self.times[host].append(seconds)
+
+    def _median(self, xs: list[float]) -> float:
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    def stragglers(self) -> list[str]:
+        if len(self.times) < 2:
+            return []
+        med = self._median([self._median(list(v)) for v in self.times.values()
+                            if v])
+        return [h for h, v in self.times.items()
+                if v and self._median(list(v)) > self.factor * med]
+
+    def ws_weights(self) -> dict[str, float]:
+        """Relative work weights for the WS scheduler: slow host -> less work.
+
+        This plugs the paper's weighted scheduling into straggler mitigation:
+        host-side tasks are dispatched with Farm(policy=WS()) where each
+        host's queue weight is scaled by its observed slowdown.
+        """
+        if not self.times:
+            return {}
+        meds = {h: self._median(list(v)) for h, v in self.times.items() if v}
+        fleet = self._median(list(meds.values()))
+        return {h: fleet / m for h, m in meds.items()}

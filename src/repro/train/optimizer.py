@@ -1,0 +1,85 @@
+"""AdamW from scratch (no optax in this environment, and none needed).
+
+Moments are kept in float32 regardless of param dtype (bf16 params get a
+f32 update then cast back — the moment tensors double as the "master"
+precision).  Global-norm clipping and a warmup+cosine schedule included.
+Moment pytrees inherit the params' sharding via out_shardings at jit time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.lr * (cfg.min_lr_ratio
+                    + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_moments(params: Any) -> tuple[Any, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any, m: Any, v: Any, params: Any, step: jnp.ndarray,
+    cfg: AdamWConfig,
+) -> tuple[Any, Any, Any, dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (params', m', v', stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    count = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** count
+    bc2 = 1.0 - cfg.b2 ** count
+
+    def upd(g, m_, v_, p):
+        g = g.astype(jnp.float32) * scale
+        m_n = cfg.b1 * m_ + (1 - cfg.b1) * g
+        v_n = cfg.b2 * v_ + (1 - cfg.b2) * jnp.square(g)
+        update = (m_n / bc1) / (jnp.sqrt(v_n / bc2) + cfg.eps)
+        p_f = p.astype(jnp.float32)
+        p_n = p_f - lr * (update + cfg.weight_decay * p_f)
+        return p_n.astype(p.dtype), m_n, v_n
+
+    # flatten once (param trees contain structural tuples, so a tree.map
+    # returning tuples would be ambiguous)
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(m)
+    v_leaves = treedef.flatten_up_to(v)
+    new = [upd(g, m_, v_, p) for g, m_, v_, p
+           in zip(g_leaves, m_leaves, v_leaves, p_leaves)]
+    params_n = jax.tree.unflatten(treedef, [t[0] for t in new])
+    m_n = jax.tree.unflatten(treedef, [t[1] for t in new])
+    v_n = jax.tree.unflatten(treedef, [t[2] for t in new])
+    stats = dict(grad_norm=gnorm, lr=lr)
+    return params_n, m_n, v_n, stats

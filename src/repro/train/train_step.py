@@ -1,0 +1,77 @@
+"""The jitted training step: loss + grad + AdamW, with optional grad-accum.
+
+``TrainState`` is a registered-dataclass pytree so it flows through jit /
+checkpointing / sharding unchanged.  Gradient accumulation runs microbatches
+through a ``lax.scan`` with f32 gradient accumulators (keeps the activation
+peak at one microbatch while the batch dimension stays data-sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    m: Any
+    v: Any
+    step: jnp.ndarray     # int32 scalar
+
+
+def init_state(params: Any) -> TrainState:
+    m, v = opt.init_moments(params)
+    return TrainState(params=params, m=m, v=v, step=jnp.int32(0))
+
+
+def make_train_step(loss_fn: Callable, cfg: opt.AdamWConfig,
+                    *, grad_accum: int = 1) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics dict)."""
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def micro(carry, mb):
+            acc, metrics_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / grad_accum,
+                acc, grads)
+            metrics_acc = jax.tree.map(
+                lambda s, x: s + x.astype(jnp.float32) / grad_accum,
+                metrics_acc, metrics)
+            return (acc, metrics_acc), None
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        metrics0 = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.float32),
+            jax.eval_shape(lambda: loss_fn(params, jax.tree.map(
+                lambda x: x[0], mbs))[1]))
+        (grads, metrics), _ = jax.lax.scan(micro, (zeros, metrics0), mbs)
+        return metrics["loss"], metrics, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        params, m, v, stats = opt.adamw_update(
+            grads, state.m, state.v, state.params, state.step, cfg)
+        new_state = TrainState(params=params, m=m, v=v, step=state.step + 1)
+        return new_state, {**metrics, **stats}
+
+    return train_step

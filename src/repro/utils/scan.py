@@ -1,0 +1,72 @@
+"""Unrollable scan — exact roofline accounting for loopy programs.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, ignoring the
+trip count (verified empirically; a 10-iteration scan reports 1 iteration
+of flops).  Every scanned model would therefore under-report flops/bytes/
+collective-bytes by ~n_layers x n_chunks in the roofline table.
+
+Fix: all model-internal scans go through :func:`scan` below.  Under
+``unrolled()`` (used only by the dry-run's *analysis* lowering) it expands
+to a Python loop, so the compiled HLO contains every iteration and
+cost_analysis is exact.  The production artifact keeps ``lax.scan``
+(compact HLO, fast compiles); the dry-run lowers both and takes memory
+from the scanned artifact, costs from the unrolled one.
+
+``analysis_chunk`` lets memory-motivated chunk sizes (flash attention, CE)
+grow in analysis mode so the unrolled graph stays compilable — for those
+loops the chunk size does not change total flops, only peak memory, which
+is measured on the scanned artifact anyway.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+_STATE = {"unroll": False}
+
+
+@contextlib.contextmanager
+def unrolled():
+    old = _STATE["unroll"]
+    _STATE["unroll"] = True
+    try:
+        yield
+    finally:
+        _STATE["unroll"] = old
+
+
+def is_unrolled() -> bool:
+    return _STATE["unroll"]
+
+
+def analysis_chunk(prod_chunk: int, total: int, max_blocks: int = 8) -> int:
+    """Chunk size to use: production value, or total/max_blocks when
+    unrolled (keeps the unrolled block count bounded)."""
+    if not _STATE["unroll"]:
+        return prod_chunk
+    return max(prod_chunk, -(-total // max_blocks))
+
+
+def scan(f: Callable, init: Any, xs: Any, length: int | None = None):
+    """Drop-in for ``jax.lax.scan`` (no reverse/unroll kwargs needed here)."""
+    if not _STATE["unroll"]:
+        return jax.lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+        slices = [None] * n
+    else:
+        n = length or jax.tree.leaves(xs)[0].shape[0]
+        slices = [jax.tree.map(lambda a, i=i: a[i], xs) for i in range(n)]
+    carry = init
+    ys = []
+    for xi in slices:
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys)
+    return carry, stacked

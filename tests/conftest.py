@@ -1,0 +1,37 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — unit tests must see the real single
+CPU device; only the dry-run (and the subprocess in test_dryrun_small)
+fakes a device count.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_tree_dataset(rng, n=300, *, n_cont=2, n_disc=2, n_classes=2,
+                      unknown_frac=0.0, max_bins=64, domain=16):
+    """Random small rank-space dataset with learnable structure."""
+    from repro.core import binning
+    cols, kinds = [], []
+    for _ in range(n_cont):
+        base = rng.uniform(-2, 2, size=domain)     # small domain => exact bins
+        c = rng.choice(base, size=n)
+        if unknown_frac:
+            c = c.copy()
+            c[rng.random(n) < unknown_frac] = np.nan
+        cols.append(c)
+        kinds.append(True)
+    for _ in range(n_disc):
+        cols.append(rng.integers(0, int(rng.integers(2, 5)), n))
+        kinds.append(False)
+    y = rng.integers(0, n_classes, n)
+    gate = np.nan_to_num(cols[0], nan=0.0) > 0
+    y = np.where(gate, (y + 1) % n_classes, y)     # correlate with col 0
+    return binning.fit(cols, y, attr_is_cont=kinds, n_classes=n_classes,
+                       max_bins=max_bins)

@@ -1,0 +1,120 @@
+"""Semantics tests for the sequential YaDT oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import binning, c45
+from repro.core.config import GrowConfig
+from repro.core.tree import predict
+
+
+def _build(cols, y, kinds, cfg=GrowConfig(), **kw):
+    ds = binning.fit(cols, y, attr_is_cont=kinds, **kw)
+    return ds, c45.build(ds, cfg)
+
+
+def test_pure_root_is_leaf():
+    ds, tree = _build([np.array([1.0, 2.0, 3.0, 4.0])],
+                      np.zeros(4, int), [True], n_classes=2)
+    assert tree.size == 1 and tree.n_leaves == 1
+    assert int(np.asarray(tree.node_class)[0]) == 0
+
+
+def test_single_continuous_split():
+    x = np.array([1.0, 2.0, 3.0, 10.0, 11.0, 12.0])
+    y = np.array([0, 0, 0, 1, 1, 1])
+    ds, tree = _build([x], y, [True])
+    t = tree.to_numpy()
+    assert int(t.node_attr[0]) == 0
+    # threshold must be a value of the WHOLE training set below the midpoint
+    thr = ds.threshold_value(0, int(t.node_split_bin[0]))
+    assert thr == 3.0                     # largest value <= (3+10)/2
+    pred = np.asarray(predict(tree, ds.x, ds.attr_is_cont))
+    assert (pred == y).all()
+
+
+def test_discrete_split_children_per_domain_value():
+    x = np.array([0, 0, 1, 1, 2, 2])
+    y = np.array([0, 0, 1, 1, 0, 0])
+    ds, tree = _build([x], y, [False])
+    t = tree.to_numpy()
+    assert int(t.node_attr[0]) == 0
+    assert int(t.node_nchild[0]) == 3     # one child per domain value
+    pred = np.asarray(predict(tree, ds.x, ds.attr_is_cont))
+    assert (pred == y).all()
+
+
+def test_discrete_attr_consumed_in_subtree():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2, 200)
+    b = rng.integers(0, 3, 200)
+    y = (a ^ (b == 1)).astype(int)
+    ds, tree = _build([a, b], y, [False, False])
+    t = tree.to_numpy()
+    # no node may test the same discrete attribute as any ancestor
+    def walk(i, used):
+        attr = int(t.node_attr[i])
+        if attr < 0:
+            return
+        assert attr not in used
+        for j in range(int(t.node_nchild[i])):
+            walk(int(t.node_child0[i]) + j, used | {attr})
+    walk(0, set())
+
+
+def test_min_objs_stop():
+    x = np.array([1.0, 2.0, 3.0])
+    y = np.array([0, 1, 0])
+    cfg = GrowConfig(min_objs=2.0)        # 3 < 2*min_objs => leaf
+    ds, tree = _build([x], y, [True], cfg)
+    assert tree.size == 1
+
+
+def test_unknown_fractional_weights():
+    # known cases split perfectly; one unknown case spreads over children
+    x = np.array([1.0, 1.0, 1.0, 5.0, 5.0, 5.0, np.nan, np.nan])
+    y = np.array([0, 0, 0, 1, 1, 1, 0, 1])
+    cfg = GrowConfig(unknown_fractional=True)
+    ds, tree = _build([x], y, [True], cfg)
+    t = tree.to_numpy()
+    assert int(t.node_attr[0]) == 0
+    c0, c1 = int(t.node_child0[0]), int(t.node_child0[0]) + 1
+    # each child got 3 known cases + 2 unknowns at weight 3/6 each
+    assert t.node_freq[c0].sum() == pytest.approx(4.0, abs=1e-5)
+    assert t.node_freq[c1].sum() == pytest.approx(4.0, abs=1e-5)
+
+
+def test_unknown_heaviest_routing():
+    x = np.array([1.0, 1.0, 1.0, 1.0, 5.0, 5.0, np.nan])
+    y = np.array([0, 0, 0, 0, 1, 1, 1])
+    cfg = GrowConfig(unknown_fractional=False, min_objs=1.0)
+    ds, tree = _build([x], y, [True], cfg)
+    t = tree.to_numpy()
+    c0 = int(t.node_child0[0])
+    # unknown went to the heavier (left) child with full weight
+    assert t.node_freq[c0].sum() == pytest.approx(5.0, abs=1e-5)
+
+
+def test_task_trace_records_dag():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, 400)
+    d = rng.integers(0, 3, 400)
+    y = ((x > 0.5) ^ (d == 1)).astype(int)
+    ds = binning.fit([x, d], y, attr_is_cont=[True, False])
+    trace = []
+    tree = c45.build(ds, GrowConfig(), task_trace=trace)
+    assert len(trace) == tree.size
+    roots = [t for t in trace if t["parent"] < 0]
+    assert len(roots) == 1 and roots[0]["r"] == 400
+    internal = sum(1 for t in trace if t["n_children"] > 0)
+    assert internal == tree.size - tree.n_leaves
+
+
+def test_gain_ratio_criterion_builds():
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0, 1, 300)
+    y = (x > 0.4).astype(int)
+    ds = binning.fit([x], y, attr_is_cont=[True])
+    tree = c45.build(ds, GrowConfig(criterion="gain_ratio"))
+    pred = np.asarray(predict(tree, ds.x, ds.attr_is_cont))
+    assert (pred == y).mean() > 0.95

@@ -1,0 +1,63 @@
+"""Fault tolerance control plane: heartbeats, elastic mesh, stragglers."""
+
+import pytest
+
+from repro.train import elastic
+
+
+def test_heartbeat_failure_detection():
+    hb = elastic.HeartbeatMonitor(timeout=10.0)
+    hb.beat("h0", 1, now=0.0)
+    hb.beat("h1", 1, now=0.0)
+    hb.beat("h0", 2, now=8.0)
+    assert hb.failed(now=11.0) == ["h1"]
+    assert hb.alive(now=11.0) == ["h0"]
+
+
+def test_plan_mesh_full_fleet():
+    shape, axes = elastic.plan_mesh(512)
+    assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+    shape, axes = elastic.plan_mesh(256)
+    assert shape == (16, 16) and axes == ("data", "model")
+
+
+def test_plan_mesh_degraded():
+    # lose 3 chips out of a pod: data width shrinks, model anchor holds
+    shape, axes = elastic.plan_mesh(253)
+    assert axes == ("data", "model")
+    assert shape == (15, 16)
+    with pytest.raises(ValueError):
+        elastic.plan_mesh(7)
+
+
+def test_rebatch_for_mesh_keeps_per_replica_batch():
+    gb = elastic.rebatch_for_mesh(256, (16, 16), ("data", "model"))
+    assert gb == 256
+    gb = elastic.rebatch_for_mesh(256, (15, 16), ("data", "model"))
+    assert gb % 15 == 0 and gb <= 256  # divisible by the new DP width
+
+
+def test_straggler_detection_and_ws_weights():
+    sm = elastic.StragglerMonitor(factor=1.5)
+    for _ in range(8):
+        sm.record("fast0", 1.0)
+        sm.record("fast1", 1.1)
+        sm.record("slow", 2.5)
+    assert sm.stragglers() == ["slow"]
+    w = sm.ws_weights()
+    assert w["slow"] < w["fast0"]          # slow host gets less work
+
+
+def test_elastic_restore_roundtrip(tmp_path):
+    """Checkpoint written under one 'mesh' restores under another (the
+    on-disk format is mesh-agnostic)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.train import checkpoint as ckpt
+    state = {"w": jnp.arange(64.0).reshape(8, 8)}
+    path = ckpt.save(str(tmp_path), 1, state)
+    like = {"w": jnp.zeros((8, 8))}
+    restored = ckpt.restore(path, like)    # would pass shardings on a pod
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))

@@ -1,0 +1,66 @@
+"""Property: the SPMD frontier engine is exactly the sequential oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_tree_dataset
+from repro.core import c45, frontier
+from repro.core.config import GrowConfig
+from repro.core.tree import predict, trees_equal
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(30, 500),
+    n_cont=st.integers(0, 3),
+    n_disc=st.integers(0, 3),
+    n_classes=st.integers(2, 4),
+    slots=st.sampled_from([2, 7, 64]),
+    unknown=st.sampled_from([0.0, 0.15]),
+)
+def test_engines_identical(seed, n, n_cont, n_disc, n_classes, slots,
+                           unknown):
+    if n_cont + n_disc == 0:
+        n_cont = 1
+    rng = np.random.default_rng(seed)
+    ds = make_tree_dataset(rng, n, n_cont=n_cont, n_disc=n_disc,
+                           n_classes=n_classes, unknown_frac=unknown)
+    cfg = GrowConfig(max_nodes=1 << 13, frontier_slots=slots)
+    t_seq = c45.build(ds, cfg, capacity=cfg.max_nodes)
+    t_ff = frontier.build(ds, cfg)
+    assert trees_equal(t_seq, t_ff), (
+        f"trees differ: seq={t_seq.size} ff={t_ff.size}")
+    p1 = np.asarray(predict(t_seq, ds.x, ds.attr_is_cont))
+    p2 = np.asarray(predict(t_ff, ds.x, ds.attr_is_cont))
+    assert (p1 == p2).all()
+
+
+def test_capacity_overflow_degrades_gracefully(rng):
+    ds = make_tree_dataset(rng, 500, n_cont=3, n_disc=2, n_classes=3)
+    cfg = GrowConfig(max_nodes=16, frontier_slots=8)
+    tree = frontier.build(ds, cfg)          # must not error
+    assert tree.size <= 16
+    pred = np.asarray(predict(tree, ds.x, ds.attr_is_cont))
+    assert pred.shape == (500,)
+
+
+def test_max_depth_respected(rng):
+    ds = make_tree_dataset(rng, 400, n_cont=2, n_disc=2)
+    cfg = GrowConfig(max_depth=3, max_nodes=4096)
+    t_seq = c45.build(ds, cfg, capacity=4096)
+    t_ff = frontier.build(ds, cfg)
+    assert trees_equal(t_seq, t_ff)
+    assert t_ff.depth <= 3
+
+
+def test_collect_stats_reports_cost_model(rng):
+    ds = make_tree_dataset(rng, 600, n_cont=2, n_disc=1)
+    cfg = GrowConfig(frontier_slots=16, cost_model="nsq", max_nodes=8192)
+    tree, stats = frontier.build(ds, cfg, collect_stats=True)
+    assert len(stats) >= 1
+    assert stats[0]["n_processed"] == 1           # root superstep
+    # NAP is chosen at the root (coarse grain) under |T| < c r^2
+    assert stats[0]["nap_nodes"] == 1
+    assert sum(s["n_processed"] for s in stats) == tree.size

@@ -1,0 +1,144 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (N, A, B, C, K)
+    (64, 1, 4, 2, 3),
+    (200, 3, 13, 4, 10),
+    (500, 5, 32, 2, 16),
+    (130, 2, 7, 23, 5),     # many classes (KDD-style)
+    (96, 4, 128, 3, 8),     # wide bins
+]
+
+
+@pytest.mark.parametrize("n,a,b,c,k", SHAPES)
+def test_histogram_matches_ref(n, a, b, c, k):
+    rng = np.random.default_rng(n + a)
+    x = rng.integers(-1, b, (n, a)).astype(np.int32)
+    y = rng.integers(0, c, n).astype(np.int32)
+    w = rng.uniform(0.1, 2.0, n).astype(np.float32)
+    slot = rng.integers(-1, k, n).astype(np.int32)
+    got = np.asarray(ops.frontier_histogram(
+        x, y, w, slot, n_slots=k, n_bins=b, n_classes=c))
+    want = np.asarray(ref.frontier_histogram_ref(
+        x, y, w, slot, n_slots=k, n_bins=b, n_classes=c))
+    assert got.shape == (k, a, b + 1, c)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_t,block_k,block_b", [
+    (8, 1, 2), (64, 4, 16), (512, 8, 128)])
+def test_histogram_block_shapes(block_t, block_k, block_b):
+    rng = np.random.default_rng(3)
+    n, a, b, c, k = 150, 2, 9, 3, 6
+    x = rng.integers(-1, b, (n, a)).astype(np.int32)
+    y = rng.integers(0, c, n).astype(np.int32)
+    w = np.ones(n, np.float32)
+    slot = rng.integers(-1, k, n).astype(np.int32)
+    got = np.asarray(ops.frontier_histogram(
+        x, y, w, slot, n_slots=k, n_bins=b, n_classes=c,
+        block_t=block_t, block_k=block_k, block_b=block_b))
+    want = np.asarray(ref.frontier_histogram_ref(
+        x, y, w, slot, n_slots=k, n_bins=b, n_classes=c))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_histogram_conservation():
+    """Total kernel mass == total weight of in-frontier known-valued cells."""
+    rng = np.random.default_rng(7)
+    n, a, b, c, k = 300, 3, 11, 4, 9
+    x = rng.integers(-1, b, (n, a)).astype(np.int32)
+    y = rng.integers(0, c, n).astype(np.int32)
+    w = rng.uniform(0, 1, n).astype(np.float32)
+    slot = rng.integers(-1, k, n).astype(np.int32)
+    hist = np.asarray(ops.frontier_histogram(
+        x, y, w, slot, n_slots=k, n_bins=b, n_classes=c))
+    mask = slot >= 0
+    assert hist.sum() == pytest.approx(w[mask].sum() * a, rel=1e-5)
+
+
+@pytest.mark.parametrize("criterion", ["gain", "gain_ratio"])
+@pytest.mark.parametrize("k,a,b,c", [(4, 3, 8, 2), (10, 5, 13, 4),
+                                     (3, 2, 64, 3)])
+def test_split_gain_matches_ref(k, a, b, c, criterion):
+    rng = np.random.default_rng(k * a)
+    hist = rng.uniform(0, 10, (k, a, b, c)).astype(np.float32)
+    tw = hist.sum((1, 2, 3)) / a + rng.uniform(0, 2, k).astype(np.float32)
+    cont = rng.random(a) < 0.6
+    nb = rng.integers(2, b + 1, a).astype(np.int32)
+    got_s, got_b = ops.split_gain(hist, tw.astype(np.float32), cont, nb,
+                                  criterion=criterion)
+    want_s, want_b = ref.split_gain_ref(hist, tw.astype(np.float32), cont,
+                                        nb, criterion=criterion)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 12),
+       a=st.integers(1, 6), b=st.integers(2, 20), c=st.integers(2, 6))
+def test_split_gain_property_sweep(seed, k, a, b, c):
+    rng = np.random.default_rng(seed)
+    hist = (rng.uniform(0, 5, (k, a, b, c)) *
+            (rng.random((k, a, b, c)) < 0.7)).astype(np.float32)
+    tw = hist.sum((1, 2, 3)).astype(np.float32) / max(a, 1)
+    cont = rng.random(a) < 0.5
+    nb = rng.integers(2, b + 1, a).astype(np.int32)
+    got_s, got_b = ops.split_gain(hist, tw, cont, nb)
+    want_s, want_b = ref.split_gain_ref(hist, tw, cont, nb)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+
+def test_pallas_engine_end_to_end(rng):
+    """frontier.build(impl='pallas') == sequential oracle."""
+    from conftest import make_tree_dataset
+    from repro.core import c45, frontier
+    from repro.core.config import GrowConfig
+    from repro.core.tree import trees_equal
+    ds = make_tree_dataset(rng, 250, n_cont=2, n_disc=1, max_bins=32)
+    cfg = GrowConfig(max_nodes=2048, frontier_slots=8)
+    t_seq = c45.build(ds, cfg, capacity=2048)
+    t_pal = frontier.build(ds, cfg, impl="pallas")
+    assert trees_equal(t_seq, t_pal)
+
+
+FLASH_CASES = [
+    # (B, S, H, KV, D, window, softcap, dtype)
+    (2, 24, 4, 2, 16, 0, 0.0, "float32"),
+    (1, 33, 4, 4, 8, 0, 0.0, "float32"),      # MHA + ragged padding
+    (2, 24, 4, 2, 16, 7, 0.0, "float32"),     # sliding window
+    (2, 24, 4, 2, 16, 0, 30.0, "float32"),    # softcap (gemma2)
+    (2, 40, 6, 2, 32, 9, 50.0, "float32"),    # window + softcap + GQA 3
+    (2, 32, 4, 2, 16, 0, 0.0, "bfloat16"),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_pallas_flash_attention_matches_jnp(case):
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models import layers
+    from repro.models.layers import AttnSpec
+    b, s, h, kv, d, window, cap, dtype = case
+    rng = np.random.default_rng(b * s)
+    dt = jnp.dtype(dtype)
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, d)), dt)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kv, d)), dt)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, kv, d)), dt)
+    spec = AttnSpec(n_heads=h, n_kv_heads=kv, head_dim=d, d_model=h * d,
+                    window=window, softcap=cap, dtype=dt)
+    want = layers.blockwise_attention(q, k, v, spec=spec, q_chunk=8,
+                                      kv_chunk=8)
+    got = flash_attention(q, k, v, window=window, softcap=cap, q_chunk=8,
+                          kv_chunk=8, interpret=True)
+    tol = 3e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)

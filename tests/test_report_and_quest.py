@@ -1,0 +1,65 @@
+"""Report rendering + QUEST classification-function coverage."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.data import quest
+from repro.launch import report, roofline as rl
+
+
+@pytest.mark.parametrize("fn", [1, 2, 3, 4, 5])
+def test_quest_functions_produce_both_classes(fn):
+    ds = quest.generate(2_000, function=fn, seed=0, perturbation=0.0)
+    frac = ds.y.mean()
+    assert 0.02 < frac < 0.98, f"function {fn} degenerate: {frac}"
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%p), replica_groups=[16,16]<=[256]
+  %ar = f32[64]{0} all-reduce(%x), replica_groups=[1,256]<=[256]
+  %rs = f32[4,8]{1,0} reduce-scatter(%y), replica_groups=[16,16]<=[256]
+  %cp = f32[10]{0} collective-permute(%z), channels=...
+  %other = f32[99]{0} add(%a, %b)
+"""
+    total, by_op = rl.collective_bytes(hlo, n_devices=256)
+    ag = 16 * 1024 * 2 * (15 / 16)
+    ar = 64 * 4 * 2 * (255 / 256)
+    rs = 4 * 8 * 4 * 15
+    cp = 10 * 4
+    assert by_op["all-gather"] == pytest.approx(ag)
+    assert by_op["all-reduce"] == pytest.approx(ar)
+    assert by_op["reduce-scatter"] == pytest.approx(rs)
+    assert by_op["collective-permute"] == pytest.approx(cp)
+    assert total == pytest.approx(ag + ar + rs + cp)
+
+
+def test_report_renders_mixed_results(tmp_path):
+    data = {
+        "a/train_4k": dict(status="ok", arch="a", shape="train_4k",
+                           t_compute=0.01, t_memory=0.02, t_collective=0.005,
+                           bottleneck="memory", useful_flops_ratio=0.5,
+                           mem_temp_gb=3.2),
+        "b/decode_32k": dict(status="fail", error="Boom"),
+        "c/prefill_32k": dict(status="ok", mem_temp_gb=1.0),
+    }
+    p = tmp_path / "r.json"
+    p.write_text(json.dumps(data))
+    table = report.render(str(p))
+    assert "| a | train_4k | 10.0 | 20.0 | 5.0 | memory | 0.50 | 3.2 |" in table
+    assert "FAIL" in table and "compile-only" in table
+    assert "1/3" not in report.summarize(str(p))  # 2/3 ok
+
+
+def test_model_flops_formulas():
+    t = rl.model_flops_for("yi_6b", "train_4k")
+    from repro.configs import base as cfgbase
+    n = cfgbase.get_config("yi_6b").param_count()
+    assert t == pytest.approx(6.0 * n * 256 * 4096)
+    d = rl.model_flops_for("yi_6b", "decode_32k")
+    assert d == pytest.approx(2.0 * n * 128)
+    moe_t = rl.model_flops_for("phi35_moe", "train_4k")
+    cfg = cfgbase.get_config("phi35_moe")
+    assert moe_t == pytest.approx(6.0 * cfg.active_param_count() * 256 * 4096)

@@ -1,0 +1,95 @@
+"""Partitioning rules: divisibility safety + layout intent."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.models.model import build_model
+from repro.sharding import partitioning as part
+
+
+class FakeMesh:
+    """Just enough Mesh surface for the rule functions."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        return int(np.prod(list(self.shape.values())))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD_MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _spec(name, shape, mesh=MESH):
+    path = (jax.tree_util.DictKey(name),)
+    leaf = jax.ShapeDtypeStruct(shape, jax.numpy.float32)
+    return part.param_pspec(path, leaf, mesh)
+
+
+def test_generic_2d_zero3_plus_tp():
+    assert _spec("wq", (4096, 4096)) == P("data", "model")
+
+
+def test_indivisible_dims_stay_replicated():
+    assert _spec("wq", (4090, 4096)) == P(None, "model")
+    assert _spec("wq", (4096, 33)) == P("data", None)
+    assert _spec("mu", (5, 33)) == P(None, None)
+
+
+def test_embed_and_head_vocab_parallel():
+    assert _spec("embed", (262144, 2560)) == P("model", "data")
+    assert _spec("lm_head", (2560, 262144)) == P("data", "model")
+
+
+def test_expert_weights_ep():
+    assert _spec("w_gate", (16, 4096, 6400)) == P("model", "data", None)
+
+
+def test_1d_replicated():
+    assert _spec("scale", (4096,)) == P()
+
+
+@pytest.mark.parametrize("arch", ["phi35_moe", "gemma3_4b", "rwkv6_3b",
+                                  "recurrentgemma_2b", "musicgen_medium"])
+def test_all_param_rules_divide(arch):
+    """Every full-config param gets a spec whose sharded dims divide."""
+    cfg = cfgbase.get_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+
+    def check(path, leaf):
+        spec = part.param_pspec(path, leaf, MESH)
+        for dim, axes in zip(leaf.shape, spec):
+            if axes is None:
+                continue
+            assert dim % part.axis_size(MESH, axes) == 0, (path, leaf.shape,
+                                                           spec)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(check, params)
+
+
+def test_batch_axes_single_vs_multipod():
+    assert part.batch_axes(MESH) == ("data",)
+    assert part.batch_axes(POD_MESH) == ("pod", "data")
+
+
+def test_cache_pspec_seq_sharding():
+    cfg = cfgbase.get_config("gemma2_9b")
+    # global layer (odd index in (local, global) pattern)
+    spec = part.cache_pspec(cfg, MESH, 1, "k", (128, 32768, 8, 256),
+                            long=False)
+    assert spec == P(("data",), "model", None, None)
+    # batch-1 long context: sequence takes every axis
+    spec = part.cache_pspec(cfg, MESH, 1, "k", (1, 524288, 8, 256),
+                            long=True)
+    assert spec == P(None, ("data", "model"), None, None)
+    # local layer ring stays replicated on seq
+    spec = part.cache_pspec(cfg, MESH, 0, "k", (128, 4096, 8, 256),
+                            long=False)
+    assert spec == P(("data",), None, None, None)
