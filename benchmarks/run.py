@@ -18,6 +18,7 @@ MODULES = (
     "fig10_11_scalability",
     "fig12_cost_models",
     "fig13_scheduling",
+    "fig_superstep",
     "table2_quadcore",
 )
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI smoke: benchmark suite at 1/10 scale + the tier-1 test suite.
+#
+#   benchmarks/smoke.sh            # everything
+#   ONLY=fig_superstep benchmarks/smoke.sh   # filter benchmark modules
+#
+# BENCH_SCALE shrinks every Table-1 stand-in (common.SCALES); 0.1 keeps the
+# whole run CPU-viable while preserving tree/task-DAG shape.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export BENCH_SCALE="${BENCH_SCALE:-0.1}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== benchmarks (BENCH_SCALE=${BENCH_SCALE}) =="
+python -m benchmarks.run ${ONLY:+--only "$ONLY"}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q

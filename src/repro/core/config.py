@@ -25,6 +25,14 @@ class GrowConfig:
         paper's best), "nlogn" (|T|<c·r·log r), "alpha" (α<r).
       alpha: the α of the "alpha" cost model (paper uses 1000).
       strategy: "np" (nodes parallelism) or "nap" (nodes+attributes).
+      compact: ``impl="pallas"`` only — gather live cases into bucketed
+        dense buffers before the histogram kernel, so deep supersteps cost
+        O(live) instead of O(N) (see repro.kernels.compaction).
+      compact_min_bucket: smallest gather bucket of the power-of-two ladder
+        (below this the gather overhead beats the kernel-traffic saving).
+      block_t/block_k/block_b/block_a: pinned Pallas tile sizes for the
+        histogram (t=case, k=slot, b=bin) and split-gain (k=slot, a=attr)
+        kernels; None = shape-driven heuristic (repro.kernels.autotune).
     """
 
     min_objs: float = 2.0
@@ -36,3 +44,9 @@ class GrowConfig:
     cost_model: str = "nsq"
     alpha: float = 1000.0
     strategy: str = "nap"
+    compact: bool = True
+    compact_min_bucket: int = 1024
+    block_t: int | None = None
+    block_k: int | None = None
+    block_b: int | None = None
+    block_a: int | None = None

@@ -15,9 +15,13 @@ allocated contiguously in slot order, node ids coincide exactly with the
 sequential oracle's breadth-first ids — trees are comparable elementwise.
 
 Everything is fixed-shape and jit-able; the full build is a
-``lax.while_loop`` over supersteps.  The histogram hot-spot is pluggable:
-``impl="jnp"`` uses a segment-sum (reference), ``impl="pallas"`` calls the
-MXU one-hot-matmul kernel from :mod:`repro.kernels`.
+``lax.while_loop`` over supersteps.  The splitAtt hot-spot is pluggable:
+``impl="jnp"`` scores gains from a segment-sum histogram (reference);
+``impl="pallas"`` runs the whole phase on the kernels in
+:mod:`repro.kernels` — the MXU one-hot-matmul histogram (with bucketed
+active-case compaction, ``GrowConfig.compact``) feeding the fused
+scan/entropy split-gain kernel, tile sizes planned by
+:mod:`repro.kernels.autotune`.
 """
 
 from __future__ import annotations
@@ -124,16 +128,54 @@ def frontier_histogram_jnp(
     return hist.reshape(k + 1, a_dim, b + 1, c)[:k]
 
 
+def _block_plan(prob: FrontierProblem, n_cases: int):
+    from repro.kernels import autotune
+    return autotune.plan_for_config(
+        prob.cfg, n_cases=n_cases, n_bins=prob.n_bins_max,
+        n_classes=prob.n_classes, n_attrs=prob.n_attrs)
+
+
 def _histogram(x, y, w, slot, *, prob: FrontierProblem, impl: str):
     k = prob.cfg.frontier_slots
     if impl == "pallas":
         from repro.kernels import ops as kernel_ops
+        plan = _block_plan(prob, prob.n_cases)
+        if prob.cfg.compact:
+            return kernel_ops.frontier_histogram_compact(
+                x, y, w, slot, n_slots=k, n_bins=prob.n_bins_max,
+                n_classes=prob.n_classes,
+                min_bucket=prob.cfg.compact_min_bucket,
+                block_t=plan.block_t, block_k=plan.block_k,
+                block_b=plan.block_b)
         return kernel_ops.frontier_histogram(
             x, y, w, slot, n_slots=k, n_bins=prob.n_bins_max,
-            n_classes=prob.n_classes)
+            n_classes=prob.n_classes, block_t=plan.block_t,
+            block_k=plan.block_k, block_b=plan.block_b)
     return frontier_histogram_jnp(
         x, y, w, slot, n_slots=k, n_bins=prob.n_bins_max,
         n_classes=prob.n_classes)
+
+
+def _gains(hist, total_w, attr_is_cont, n_bins, *, prob: FrontierProblem,
+           impl: str):
+    """splitAtt scoring: (K, A) score/bin planes from the (K, A, B, C) hist.
+
+    ``impl="pallas"`` runs the fused scan/entropy kernel — one HBM read of
+    the histogram, results bit-identical to the jnp path (the kernel body
+    calls the same :mod:`repro.core.entropy` functions per VMEM block, and
+    the (K, A) grid decomposition is exact for per-(node, attr) math).
+    """
+    cfg = prob.cfg
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        plan = _block_plan(prob, prob.n_cases)
+        return kernel_ops.split_gain(
+            hist, total_w, attr_is_cont, n_bins, min_objs=cfg.min_objs,
+            criterion=cfg.criterion, block_k=plan.block_k,
+            block_a=plan.block_a)
+    return entropy.gains_from_histogram(
+        hist, total_w=total_w, attr_is_cont=attr_is_cont, n_bins=n_bins,
+        min_objs=cfg.min_objs, criterion=cfg.criterion)
 
 
 # --------------------------------------------------------------------------
@@ -178,9 +220,8 @@ def superstep(
         _histogram(x, y, w, slot, prob=prob, impl=impl))      # (K,A,B+1,C)
     hist = hist_u[:, :, :b_dim, :]
     unknown = hist_u[:, :, b_dim, :]                          # (K, A, C)
-    score, split_bin = entropy.gains_from_histogram(
-        hist, total_w=total_w, attr_is_cont=attr_is_cont, n_bins=n_bins,
-        min_objs=cfg.min_objs, criterion=cfg.criterion)       # (K, A)
+    score, split_bin = _gains(
+        hist, total_w, attr_is_cont, n_bins, prob=prob, impl=impl)  # (K, A)
     active_k = state.active[ids_safe] & valid[:, None]
     best_attr, best_score, has_split = entropy.pick_best_attribute(
         score, active_k)
@@ -300,6 +341,7 @@ def superstep(
     )
     stats = dict(
         n_processed=jnp.sum(valid.astype(jnp.int32)),
+        n_active=jnp.sum((slot >= 0).astype(jnp.int32)),
         n_internal=jnp.sum(internal.astype(jnp.int32)),
         n_children=total_children,
         max_r=jnp.max(jnp.where(valid, total_w, 0.0)),

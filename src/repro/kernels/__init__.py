@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the splitAtt hot-spot (+ flash attention for the LM
+cells).  Callers go through :mod:`repro.kernels.ops`, which picks interpret
+mode off-TPU; :mod:`repro.kernels.autotune` plans the block sizes and
+:mod:`repro.kernels.compaction` keeps deep-superstep traffic proportional to
+live cases.  :mod:`repro.kernels.ref` holds the pure-jnp oracles the tests
+compare against.
+"""

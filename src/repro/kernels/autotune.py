@@ -1,0 +1,101 @@
+"""Block-size planning for the splitAtt Pallas kernels.
+
+Both kernels are tiled over (frontier slot, bin/attribute, case) axes; the
+tile sizes decide VMEM residency and therefore whether the kernels hit their
+roofline.  The dominant VMEM tenants are
+
+  histogram:  the one-hot expansion  E (block_t, block_k*block_b) f32
+              plus the output window    (block_k, block_b, C) f32
+  split_gain: the histogram block       (block_k, block_a, B, C) f32
+              plus ~3x that in scan/entropy intermediates
+
+``plan_blocks`` picks power-of-two tiles that keep both under a VMEM budget
+(default 4 MB — half a v5e core's VMEM, leaving room for double buffering)
+while never exceeding the (padded) problem extents.  Every field can be
+pinned via :class:`repro.core.config.GrowConfig` (``block_*`` attributes);
+``None`` means "use the heuristic".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Conservative per-kernel VMEM budget (bytes).  ~16 MB/core physically; half
+# of it so the pipeline can double-buffer input tiles.
+VMEM_BUDGET = 4 << 20
+
+
+def _pow2_ceil(x: int) -> int:
+    x = max(1, int(x))
+    return 1 << (x - 1).bit_length()
+
+
+def _pow2_floor(x: int) -> int:
+    x = max(1, int(x))
+    return 1 << (x.bit_length() - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Static tile sizes for one frontier problem shape.
+
+    ``block_t/block_k/block_b`` drive the histogram kernel's
+    (case, slot, bin) grid; ``block_k/block_a`` drive the split-gain
+    kernel's (slot, attribute) grid.
+    """
+    block_t: int
+    block_k: int
+    block_b: int
+    block_a: int
+
+
+def plan_blocks(
+    *,
+    n_cases: int,
+    n_slots: int,
+    n_bins: int,          # B: the histogram kernel emits B+1 (unknown bin)
+    n_classes: int,
+    n_attrs: int,
+    vmem_budget: int = VMEM_BUDGET,
+    block_t: int | None = None,
+    block_k: int | None = None,
+    block_b: int | None = None,
+    block_a: int | None = None,
+) -> BlockPlan:
+    """Choose tile sizes from the problem shape (overrides win)."""
+    b1 = n_bins + 1
+    c = max(1, n_classes)
+
+    # Case tile: 512 saturates the MXU contraction; smaller problems shrink
+    # to their padded extent so interpret-mode tests stay fast.
+    bt = block_t or min(512, _pow2_ceil(max(8, n_cases)))
+
+    # Bin tile: whole (padded) bin axis when it fits a lane tile, else 128
+    # so each output window is lane-aligned.
+    bb = block_b or min(128, _pow2_ceil(b1))
+
+    # Attribute tile for split_gain: small A is the common case (paper
+    # datasets: 7..77) — take the whole axis up to 8.
+    ba = block_a or min(8, _pow2_ceil(n_attrs))
+
+    if block_k is None:
+        # Histogram: 4*bt*bk*bb (E) + 4*bk*bb*c (out) <= budget
+        hist_k = (vmem_budget * 3 // 4) // (4 * bb * (bt + c))
+        # Split-gain: ~4 resident copies of the (bk, ba, B, C) block
+        gain_k = vmem_budget // (16 * ba * max(1, n_bins) * c)
+        bk = _pow2_floor(min(hist_k, gain_k))
+        bk = max(1, min(bk, 32, _pow2_ceil(n_slots)))
+    else:
+        bk = block_k
+
+    return BlockPlan(block_t=bt, block_k=bk, block_b=bb, block_a=ba)
+
+
+def plan_for_config(cfg, *, n_cases: int, n_bins: int, n_classes: int,
+                    n_attrs: int) -> BlockPlan:
+    """Plan from a :class:`GrowConfig` (its ``block_*`` fields pin tiles)."""
+    return plan_blocks(
+        n_cases=n_cases, n_slots=cfg.frontier_slots, n_bins=n_bins,
+        n_classes=n_classes, n_attrs=n_attrs,
+        block_t=cfg.block_t, block_k=cfg.block_k, block_b=cfg.block_b,
+        block_a=cfg.block_a)

@@ -35,6 +35,25 @@ def frontier_histogram(x, y, w, slot, *, n_slots: int, n_bins: int,
         interpret=interpret)
 
 
+def frontier_histogram_compact(x, y, w, slot, *, n_slots: int, n_bins: int,
+                               n_classes: int, min_bucket: int = 1024,
+                               block_t: int | None = None,
+                               block_k: int | None = None,
+                               block_b: int | None = None,
+                               interpret: bool | None = None) -> jnp.ndarray:
+    """Histogram kernel over the compacted live cases (bucketed gather).
+
+    Same contract as :func:`frontier_histogram`; the case-tile grid scales
+    with the open frontier's live-case count instead of N (see
+    :mod:`repro.kernels.compaction`).
+    """
+    from repro.kernels import compaction
+    return compaction.compact_frontier_histogram(
+        x, y, w, slot, n_slots=n_slots, n_bins=n_bins, n_classes=n_classes,
+        min_bucket=min_bucket, block_t=block_t, block_k=block_k,
+        block_b=block_b, interpret=interpret)
+
+
 def split_gain(hist, total_w, attr_is_cont, n_bins, *, min_objs: float = 2.0,
                criterion: str = "gain", block_k: int = 8, block_a: int = 8,
                interpret: bool | None = None):

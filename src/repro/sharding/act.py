@@ -25,6 +25,7 @@ _STATE = {"dp": ("data",), "tp": "model", "dp_size": 1, "tp_size": 1,
           # --- layout knobs (hillclimbed; see EXPERIMENTS.md §Perf) -------
           "moe2d": False,    # shard MoE capacity axis over DP
           "yadt_rs": True,   # reduce-scatter the frontier histogram over K (confirmed win)
+          "yadt_compact": True,  # keep compacted live-case buffers DP-sharded
           "kv_seq_shard": False,  # capture prefill KV seq-sharded over TP
           }
 
@@ -95,6 +96,21 @@ def shard_frontier_hist(x):
     if not (_STATE["enabled"] and _STATE["yadt_rs"]):
         return x
     return _constrain(x, P(_tp_for(x.shape[0]),
+                           *([None] * (x.ndim - 1))))
+
+
+def shard_active_cases(x):
+    """Compacted live-case buffers ``(N_active,)`` / ``(N_active, A)``.
+
+    The gather that builds them reads DP-sharded case columns; without a
+    pin the partitioner tends to all-gather the result (the gathered index
+    vector is replicated).  Keeping dim0 on the DP axes makes the bucketed
+    histogram input land exactly where the full-N input lived — zero
+    resharding on either side of the compaction switch.
+    """
+    if not (_STATE["enabled"] and _STATE["yadt_compact"]):
+        return x
+    return _constrain(x, P(_dp_for(x.shape[0]),
                            *([None] * (x.ndim - 1))))
 
 

@@ -1,0 +1,129 @@
+"""Property-test front-end: real hypothesis when installed, else a fallback.
+
+The tier-1 suite must collect and pass in hermetic containers where
+``hypothesis`` cannot be installed (see requirements-dev.txt for the full
+dev environment).  When the import fails, this module provides a small
+deterministic stand-in implementing the subset of the API our tests use:
+
+  * ``st.integers / floats / sampled_from / lists / permutations / data``
+  * ``@given(...)`` with positional (right-aligned, hypothesis rules) or
+    keyword strategies
+  * ``@settings(max_examples=..., deadline=...)``
+
+Examples are drawn from a per-example seeded ``numpy`` Generator, so runs
+are reproducible (no shrinking, no example database — this is a coverage
+fallback, not a hypothesis replacement).
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _DataStrategy(_Strategy):
+        """Marker for ``st.data()`` — materialised per example by @given."""
+
+        def __init__(self):
+            super().__init__(None)
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = min_size + 8 if max_size is None else max_size
+
+            def draw(rng):
+                size = int(rng.integers(min_size, hi + 1))
+                return [elements.draw(rng) for _ in range(size)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def permutations(values):
+            pool = list(values)
+            return _Strategy(
+                lambda rng: [pool[i] for i in rng.permutation(len(pool))])
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    strategies = st
+
+    def _draw(strategy, rng):
+        if isinstance(strategy, _DataStrategy):
+            return _DataObject(rng)
+        return strategy.draw(rng)
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # hypothesis maps positional strategies to the *rightmost*
+            # parameters (so methods' ``self`` stays free)
+            n_pos = len(arg_strategies)
+            pos_names = ([p.name for p in params[len(params) - n_pos:]]
+                         if n_pos else [])
+            provided = set(pos_names) | set(kw_strategies)
+
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_fallback_max_examples", 20)
+                for example in range(n):
+                    rng = np.random.default_rng(0xC45 + example)
+                    drawn = {name: _draw(s, rng)
+                             for name, s in zip(pos_names, arg_strategies)}
+                    drawn.update({k: _draw(s, rng)
+                                  for k, s in kw_strategies.items()})
+                    fn(*args, **kwargs, **drawn)
+
+            functools.update_wrapper(wrapper, fn)
+            # pytest must not see the strategy-filled params as fixtures
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for p in params if p.name not in provided])
+            return wrapper
+
+        return deco

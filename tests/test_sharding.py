@@ -79,6 +79,27 @@ def test_batch_axes_single_vs_multipod():
     assert part.batch_axes(POD_MESH) == ("pod", "data")
 
 
+def test_shard_active_cases_pins_dp_dim0(monkeypatch):
+    """Compacted live-case buffers keep dim0 on the DP axes (layout intent)."""
+    from repro.sharding import act
+
+    seen = []
+    monkeypatch.setattr(act, "_constrain",
+                        lambda x, spec: seen.append(spec) or x)
+    x2 = np.zeros((128, 9), np.int32)
+    with act.activation_sharding(("data",), 16):
+        act.shard_active_cases(x2)
+        assert seen[-1] == P(("data",), None)
+        act.shard_active_cases(np.zeros((129,), np.float32))
+        assert seen[-1] == P(None)            # indivisible -> replicated
+    n = len(seen)
+    with act.activation_sharding(("data",), 16, yadt_compact=False):
+        act.shard_active_cases(x2)
+    assert len(seen) == n                     # knob off -> no pin
+    act.shard_active_cases(x2)                # no context -> no-op
+    assert len(seen) == n
+
+
 def test_cache_pspec_seq_sharding():
     cfg = cfgbase.get_config("gemma2_9b")
     # global layer (odd index in (local, global) pattern)
