@@ -1,0 +1,62 @@
+"""Fault-tolerance overhead: farm C4.5 build under injected crash rates.
+
+Measures what supervision costs when nothing fails (crash_p=0) and how
+build time + farm failure breakdown scale as the injected per-attempt crash
+probability rises, with one permanently dead worker in the worst row.  The
+built tree is verified oracle-equal in every row — fault tolerance is only
+interesting if the answer stays exact.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import GROW as CFG
+from benchmarks.common import emit, load_scaled
+from repro.core import c45, faults, farm_build
+from repro.core.farm import FaultPolicy
+from repro.core.tree import trees_equal
+
+N_WORKERS = 4
+ROWS = (
+    ("p0", 0.0, frozenset()),
+    ("p05", 0.05, frozenset()),
+    ("p20", 0.2, frozenset()),
+    ("p20_dead1", 0.2, frozenset({1})),
+)
+
+
+def run() -> list[dict]:
+    ds = load_scaled("forest_cover")
+    t0 = time.perf_counter()
+    oracle = c45.build(ds, CFG)
+    seq_s = time.perf_counter() - t0
+
+    rows = []
+    for name, crash_p, dead in ROWS:
+        inj = faults.FaultInjector(seed=7, spec=faults.FaultSpec(
+            crash_p=crash_p, dead_workers=dead),
+            key_fn=lambda t: t.node_id)
+        stats: dict = {}
+        t0 = time.perf_counter()
+        tree = farm_build.build(
+            ds, CFG, n_workers=N_WORKERS, injector=inj,
+            fault=FaultPolicy(max_retries=10, backoff_base=1e-4),
+            stats_out=stats)
+        dt = time.perf_counter() - t0
+        rows.append(dict(
+            name=f"fig_faults/{name}",
+            us_per_call=f"{dt * 1e6:.0f}",
+            oracle_equal=bool(trees_equal(oracle, tree)),
+            overhead_vs_seq=round(dt / seq_s, 3),
+            failures=stats["failures"],
+            retries=stats["retries"],
+            requeues=stats["requeues"],
+            quarantined=stats["quarantined"],
+            dead_workers=len(stats["dead_workers"]),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -5,11 +5,16 @@ Public surface:
   binning.fit / BinnedDataset   — EC4.5 rank-space representation
   c45.build                     — sequential YaDT oracle (reference semantics)
   frontier.build                — SPMD level-synchronous engine (NP/NAP)
+  frontier.build_farm           — fault-tolerant threaded-farm build
   GrowConfig                    — growth parameters incl. cost model/strategy
-  farm.Farm, scheduler.*        — farm-with-feedback + DRR/OD/WS policies
+  farm.Farm, FaultPolicy        — supervised farm-with-feedback runtime
+  faults.FaultInjector          — deterministic crash/hang/slow injection
+  scheduler.*                   — DRR/OD/WS/HealthWS policies
   simulate.simulate             — discrete-event farm replay (paper figures)
 """
 
 from repro.core.binning import BinnedDataset, fit, from_binned  # noqa: F401
 from repro.core.config import GrowConfig  # noqa: F401
+from repro.core.farm import (AllWorkersDead, Farm, FaultPolicy,  # noqa: F401
+                             TaskFailure, WorkerCrashed)
 from repro.core.tree import Tree, predict, trees_equal  # noqa: F401

@@ -145,6 +145,104 @@ def split_att(hist: np.ndarray, total_w: float, ds: BinnedDataset,
     return np.asarray(score), np.asarray(split_bin)
 
 
+@dataclasses.dataclass
+class SplitDecision:
+    """Pure result of processing one node (splitPre+splitAtt+splitPost math).
+
+    ``attr < 0`` means the node is a leaf.  Computing a decision mutates
+    nothing — it is a function of (dataset, task) only — so the farm may
+    retry it on any worker after a crash without corrupting the build
+    (:mod:`repro.core.farm_build`).
+    """
+
+    attr: int = -1
+    split_bin: int = -1                 # threshold bin (continuous), else -1
+    n_children: int = 0
+    child_active: np.ndarray | None = None
+    child_idx: list = dataclasses.field(default_factory=list)
+    child_w: list = dataclasses.field(default_factory=list)
+    child_freq: list = dataclasses.field(default_factory=list)
+    child_cls: list = dataclasses.field(default_factory=list)
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.attr < 0
+
+
+def split_node(ds: BinnedDataset, cfg: GrowConfig, *, idx: np.ndarray,
+               w: np.ndarray, active: np.ndarray, depth: int,
+               freq: np.ndarray, cls: int) -> SplitDecision:
+    """Process one node: the paper's splitPre/splitAtt/splitPost pipeline.
+
+    Shared verbatim by the sequential oracle (:func:`build`) and the farm
+    workers (:mod:`repro.core.farm_build`), so both engines make bitwise
+    identical split decisions.
+    """
+    if split_pre(freq, depth, cfg):
+        return SplitDecision()
+
+    hist = node_histogram(ds, idx, w)
+    total_w = float(w.sum())
+    score, split_bin = split_att(hist, total_w, ds, cfg)
+    best_attr, best_score, has_split = entropy.pick_best_attribute(
+        np.asarray(score)[None, :], np.asarray(active)[None, :])
+    best_attr = int(best_attr[0])
+    if not bool(has_split[0]):
+        return SplitDecision()
+
+    a = best_attr
+    is_cont = bool(ds.attr_is_cont[a])
+    sb = int(split_bin[a])
+    n_children = 2 if is_cont else int(ds.n_bins[a])
+
+    # --- partition cases over the children (paper §2.12-14) ---------------
+    b_col = ds.x[idx, a]
+    known = b_col >= 0
+    if is_cont:
+        child_of = np.where(b_col <= sb, 0, 1)
+    else:
+        child_of = b_col.astype(np.int64)
+    child_known_w = np.zeros(n_children, np.float64)
+    np.add.at(child_known_w, child_of[known], w[known])
+    w_known = float(child_known_w.sum())
+    heaviest = int(np.argmax(child_known_w))
+
+    child_idx: list[np.ndarray] = []
+    child_w: list[np.ndarray] = []
+    for j in range(n_children):
+        sel = known & (child_of == j)
+        ci, cw = idx[sel], w[sel]
+        if (~known).any():
+            if cfg.unknown_fractional:
+                # Full C4.5: every child receives the unknown cases with
+                # weight rescaled by its share of the known weight.
+                share = child_known_w[j] / max(w_known, EPS_W)
+                if share > 0:
+                    ci = np.concatenate([ci, idx[~known]])
+                    cw = np.concatenate(
+                        [cw, (w[~known] * share).astype(np.float32)])
+            elif j == heaviest:
+                ci = np.concatenate([ci, idx[~known]])
+                cw = np.concatenate([cw, w[~known]])
+        child_idx.append(ci)
+        child_w.append(cw.astype(np.float32))
+
+    child_active = active.copy()
+    if not is_cont:
+        child_active[a] = False       # discrete attr consumed (paper §2.6)
+    child_freq, child_cls = [], []
+    for j in range(n_children):
+        cfreq = class_frequencies(ds, child_idx[j], child_w[j]) \
+            if len(child_idx[j]) else np.zeros(ds.n_classes, np.float32)
+        ccls = int(np.argmax(cfreq)) if cfreq.sum() > EPS_W else int(cls)
+        child_freq.append(cfreq)
+        child_cls.append(ccls)
+    return SplitDecision(attr=a, split_bin=sb if is_cont else -1,
+                         n_children=n_children, child_active=child_active,
+                         child_idx=child_idx, child_w=child_w,
+                         child_freq=child_freq, child_cls=child_cls)
+
+
 def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(),
           *, task_trace: list | None = None,
           capacity: int | None = None) -> Tree:
@@ -167,82 +265,28 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(),
 
     while q:
         t = q.popleft()
-        freq = nodes.freq[t.node_id]
-        r = len(t.idx)
-        c = int(t.active.sum())
-
-        if split_pre(freq, t.depth, cfg):
+        dec = split_node(ds, cfg, idx=t.idx, w=t.w, active=t.active,
+                         depth=t.depth, freq=nodes.freq[t.node_id],
+                         cls=int(nodes.cls[t.node_id]))
+        if dec.is_leaf:
             _trace(task_trace, t, parent_of, 0, ds)
             continue
-
-        hist = node_histogram(ds, t.idx, t.w)
-        total_w = float(t.w.sum())
-        score, split_bin = split_att(hist, total_w, ds, cfg)
-        best_attr, best_score, has_split = entropy.pick_best_attribute(
-            np.asarray(score)[None, :], np.asarray(t.active)[None, :])
-        best_attr = int(best_attr[0])
-        if not bool(has_split[0]):
-            _trace(task_trace, t, parent_of, 0, ds)
-            continue
-
-        a = best_attr
-        is_cont = bool(ds.attr_is_cont[a])
-        sb = int(split_bin[a])
-        n_children = 2 if is_cont else int(ds.n_bins[a])
-
-        # --- partition cases over the children (paper §2.12-14) -----------
-        b_col = ds.x[t.idx, a]
-        known = b_col >= 0
-        if is_cont:
-            child_of = np.where(b_col <= sb, 0, 1)
-        else:
-            child_of = b_col.astype(np.int64)
-        child_known_w = np.zeros(n_children, np.float64)
-        np.add.at(child_known_w, child_of[known], t.w[known])
-        w_known = float(child_known_w.sum())
-        heaviest = int(np.argmax(child_known_w))
-
-        child_idx: list[np.ndarray] = []
-        child_w: list[np.ndarray] = []
-        for j in range(n_children):
-            sel = known & (child_of == j)
-            ci, cw = t.idx[sel], t.w[sel]
-            if (~known).any():
-                if cfg.unknown_fractional:
-                    # Full C4.5: every child receives the unknown cases with
-                    # weight rescaled by its share of the known weight.
-                    share = child_known_w[j] / max(w_known, EPS_W)
-                    if share > 0:
-                        ci = np.concatenate([ci, t.idx[~known]])
-                        cw = np.concatenate(
-                            [cw, (t.w[~known] * share).astype(np.float32)])
-                elif j == heaviest:
-                    ci = np.concatenate([ci, t.idx[~known]])
-                    cw = np.concatenate([cw, t.w[~known]])
-            child_idx.append(ci)
-            child_w.append(cw.astype(np.float32))
 
         # --- emit children in sibling order (BFS ids, same as frontier) ---
-        nodes.attr[t.node_id] = a
-        nodes.split_bin[t.node_id] = sb if is_cont else -1
-        nodes.nchild[t.node_id] = n_children
-        child_active = t.active.copy()
-        if not is_cont:
-            child_active[a] = False   # discrete attr consumed (paper §2.6)
+        nodes.attr[t.node_id] = dec.attr
+        nodes.split_bin[t.node_id] = dec.split_bin
+        nodes.nchild[t.node_id] = dec.n_children
         first = None
-        for j in range(n_children):
-            cfreq = class_frequencies(ds, child_idx[j], child_w[j]) \
-                if len(child_idx[j]) else np.zeros(ds.n_classes, np.float32)
-            ccls = int(np.argmax(cfreq)) if cfreq.sum() > EPS_W \
-                else int(nodes.cls[t.node_id])
-            cid = nodes.add(cls=ccls, freq=cfreq, depth=t.depth + 1)
+        for j in range(dec.n_children):
+            cid = nodes.add(cls=dec.child_cls[j], freq=dec.child_freq[j],
+                            depth=t.depth + 1)
             parent_of[cid] = t.node_id
             if first is None:
                 first = cid
-            q.append(_Task(cid, child_idx[j], child_w[j],
-                           child_active, t.depth + 1))
+            q.append(_Task(cid, dec.child_idx[j], dec.child_w[j],
+                           dec.child_active, t.depth + 1))
         nodes.child0[t.node_id] = first
-        _trace(task_trace, t, parent_of, n_children, ds)
+        _trace(task_trace, t, parent_of, dec.n_children, ds)
 
     return nodes.finish(ds.n_classes, capacity)
 

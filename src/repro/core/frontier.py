@@ -15,7 +15,11 @@ allocated contiguously in slot order, node ids coincide exactly with the
 sequential oracle's breadth-first ids — trees are comparable elementwise.
 
 Everything is fixed-shape and jit-able; the full build is a
-``lax.while_loop`` over supersteps.  The splitAtt hot-spot is pluggable:
+``lax.while_loop`` over supersteps.  The same tree can also be grown
+host-side through the supervised threaded farm — :func:`build_farm` — which
+tolerates worker crashes/hangs/deaths (:mod:`repro.core.farm_build`) and
+stays elementwise-equal to both this engine and the sequential oracle.
+The splitAtt hot-spot is pluggable:
 ``impl="jnp"`` scores gains from a segment-sum histogram (reference);
 ``impl="pallas"`` runs the whole phase on the kernels in
 :mod:`repro.kernels` — the MXU one-hot-matmul histogram (with bucketed
@@ -411,3 +415,16 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
         out.append({k: np.asarray(v).item() for k, v in stats.items()})
     tree = dataclasses.replace(state.tree, n_nodes=state.n_nodes)
     return tree, out
+
+
+def build_farm(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), **kw):
+    """Grow the same tree through the supervised *threaded* farm.
+
+    The host-side, fault-tolerant counterpart of :func:`build`: workers may
+    crash, hang past ``FaultPolicy.task_deadline`` or die permanently and
+    the result is still elementwise-equal to the oracle (and hence to the
+    SPMD engine).  See :func:`repro.core.farm_build.build` for the keyword
+    surface (``n_workers``, ``fault``, ``injector``, ``policy``, ...).
+    """
+    from repro.core import farm_build
+    return farm_build.build(ds, cfg, **kw)

@@ -99,6 +99,43 @@ class WS(Policy):
         return best
 
 
+class HealthWS(WS):
+    """WS scaled by per-worker health: projected-finish-time scheduling.
+
+    ``speed_fn`` returns ``{worker_index: speed}`` — the relative throughput
+    factors from :meth:`repro.train.elastic.StragglerMonitor.ws_weights`
+    (fleet_median / worker_median; a straggler scores < 1).  A worker's
+    effective load is ``(queued_weight + task_weight) / speed``, so slow
+    hosts receive proportionally less work.  Speed 0 marks a worker
+    unhealthy (heartbeat-failed): it is skipped entirely unless every
+    healthy queue is full, in which case plain WS over whatever has
+    capacity is the fallback (progress beats placement).
+    """
+
+    name = "health_ws"
+
+    def __init__(self, speed_fn) -> None:
+        self.speed_fn = speed_fn
+
+    def pick(self, weight: float, workers: Sequence[WorkerView]) -> int | None:
+        speeds = self.speed_fn() or {}
+        best, best_w = None, float("inf")
+        fallback, fallback_w = None, float("inf")
+        for i, wk in enumerate(workers):
+            if wk.queue_len() >= wk.capacity():
+                continue
+            qw = wk.queued_weight()
+            if qw < fallback_w:
+                fallback, fallback_w = i, qw
+            speed = speeds.get(i, 1.0)
+            if speed <= 0.0:
+                continue
+            eff = (qw + weight) / speed
+            if eff < best_w:
+                best, best_w = i, eff
+        return best if best is not None else fallback
+
+
 def make_policy(name: str) -> Policy:
     name = name.lower()
     if name == "drr":

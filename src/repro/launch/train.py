@@ -65,6 +65,7 @@ def train(arch: str = "phi4_mini", *, reduced: bool = True, steps: int = 20,
 
     hb = HeartbeatMonitor(timeout=120.0)
     straggle = StragglerMonitor()
+    pending_save = None
     fe = fake_frontend_embeds(cfg, global_batch // num_hosts)
     history = []
     for step in range(start_step, steps):
@@ -83,9 +84,14 @@ def train(arch: str = "phi4_mini", *, reduced: bool = True, steps: int = 20,
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f} ms")
         if ckpt_dir and (step + 1) % ckpt_every == 0:
-            ckpt.save(ckpt_dir, step + 1, state, blocking=False)
+            if pending_save is not None:
+                pending_save.wait()          # surfaces async writer errors
+            pending_save = ckpt.save(ckpt_dir, step + 1, state,
+                                     blocking=False)
         if not np.isfinite(loss):
             raise RuntimeError(f"loss diverged at step {step}")
+    if pending_save is not None:
+        pending_save.wait()
     if ckpt_dir:
         ckpt.save(ckpt_dir, steps, state, blocking=True)
     return dict(first_loss=history[0], last_loss=history[-1],

@@ -1,4 +1,4 @@
-"""Slot-batched serving engine with the paper's WS request scheduling.
+"""Slot-batched serving engine with WS request scheduling and failover.
 
 The paper's farm is applied here as a *runtime feature* (DESIGN.md §5): a
 fleet of model replicas is a farm; requests are tasks whose weight is the
@@ -11,6 +11,27 @@ Each replica runs **continuous batching** over a fixed number of cache
 slots: one jitted ``decode_step`` advances every active slot per tick;
 prompts are prefilled into free slots (batch-1 prefill merged into the slot
 axis); finished sequences free their slot immediately.
+
+The engine is additionally **fault-tolerant** (see README "Fault model"):
+
+  * a replica whose ``tick``/``admit`` raises is *evicted* — marked
+    unhealthy, never scheduled again — and its in-flight requests are
+    re-admitted to the backlog (bounded by ``max_requeues``; a request over
+    budget becomes an explicit :class:`RequestFailure`);
+  * replica liveness can also be driven by a
+    :class:`~repro.train.elastic.HeartbeatMonitor` measured in engine ticks
+    (``heartbeat_ticks``): the engine beats host ``"replica{i}"`` on every
+    successful tick and evicts replicas the monitor declares failed;
+  * per-request deadlines (``Request.deadline_ticks``, measured from
+    submission) cancel the slot and surface a ``"timeout"`` failure with
+    the partial decode;
+  * ``run_until_drained`` accounts for **every** submitted request: each
+    ends as exactly one :class:`Completion` or one :class:`RequestFailure`
+    (``engine.failed``) — hitting ``max_ticks`` or losing the last replica
+    produces explicit failure records, never a silently dropped request.
+
+Scheduler races on admission (``Replica.admit`` finding no free slot) are
+absorbed by requeueing the request rather than crashing the engine loop.
 """
 
 from __future__ import annotations
@@ -26,6 +47,7 @@ import numpy as np
 from repro.core.scheduler import Policy, QueueState, make_policy
 from repro.models.model import Model
 from repro.serve.sampling import sample
+from repro.train.elastic import HeartbeatMonitor
 
 
 @dataclasses.dataclass
@@ -34,6 +56,7 @@ class Request:
     prompt: np.ndarray          # (len,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    deadline_ticks: int | None = None   # budget in engine ticks, from submit
 
     @property
     def weight(self) -> float:
@@ -44,6 +67,17 @@ class Request:
 class Completion:
     uid: int
     tokens: list[int]
+
+
+@dataclasses.dataclass
+class RequestFailure:
+    """Explicit terminal record for a request that did not complete."""
+
+    uid: int
+    reason: str                 # timeout | replica_dead | requeue_exhausted |
+                                # no_replicas | max_ticks
+    detail: str = ""
+    tokens: list = dataclasses.field(default_factory=list)   # partial decode
 
 
 class Replica:
@@ -77,11 +111,24 @@ class Replica:
     def capacity(self) -> int:
         return self.n_slots
 
+    # -- failover introspection ----------------------------------------------
+    def active_uids(self) -> list[int]:
+        return [int(u) for u in self.uid[self.active]]
+
+    def release(self, uid: int) -> list[int]:
+        """Cancel a request's slot; returns its partial decode."""
+        for s in range(self.n_slots):
+            if self.active[s] and int(self.uid[s]) == uid:
+                self.active[s] = False
+                self.uid[s] = -1
+                return self.out.pop(uid, [])
+        return self.out.pop(uid, [])
+
     # -- admission -----------------------------------------------------------
     def admit(self, req: Request) -> None:
         free = np.flatnonzero(~self.active)
         if not free.size:
-            raise RuntimeError("no free slot (scheduler bug)")
+            raise RuntimeError("no free slot (scheduler race)")
         s = int(free[0])
         logits, cache1 = self._prefill(self.params,
                                        jnp.asarray(req.prompt)[None])
@@ -139,38 +186,185 @@ def _pad_cache_seq(cache_small: list, cache_big: list) -> list:
 
 
 class ServingEngine:
-    """Front door: WS-scheduled admission over a fleet of replicas."""
+    """Front door: WS-scheduled admission over a fleet of replicas, with
+    replica failover, bounded requeues and explicit drain accounting."""
 
-    def __init__(self, replicas: list[Replica], *,
-                 policy: str | Policy = "ws"):
+    def __init__(self, replicas: list, *, policy: str | Policy = "ws",
+                 heartbeat: HeartbeatMonitor | None = None,
+                 heartbeat_ticks: int | None = None,
+                 max_requeues: int = 2,
+                 default_deadline_ticks: int | None = None):
         self.replicas = replicas
         self.policy = policy if isinstance(policy, Policy) \
             else make_policy(policy)
+        self.heartbeat = heartbeat
+        if self.heartbeat is None and heartbeat_ticks is not None:
+            self.heartbeat = HeartbeatMonitor(timeout=heartbeat_ticks)
+        self.max_requeues = max_requeues
+        self.default_deadline_ticks = default_deadline_ticks
+        self.healthy = [True] * len(replicas)
         self.backlog: deque[Request] = deque()
         self.completed: list[Completion] = []
+        self.failed: list[RequestFailure] = []
+        self._inflight: dict[int, tuple[Request, int]] = {}   # uid -> (req, i)
+        self._requeues: dict[int, int] = {}
+        self._submit_tick: dict[int, int] = {}
+        self._tick = 0
 
+    # ------------------------------------------------------------ admission
     def submit(self, req: Request) -> None:
+        self._submit_tick.setdefault(req.uid, self._tick)
         self.backlog.append(req)
 
     def _admit_backlog(self) -> None:
         while self.backlog:
-            views = [QueueState(tasks=r.queue_len(),
-                                weight=r.queued_weight(),
-                                cap=r.capacity()) for r in self.replicas]
-            i = self.policy.pick(self.backlog[0].weight, views)
-            if i is None:
-                return                       # every replica full
-            self.replicas[i].admit(self.backlog.popleft())
+            idx = [i for i in range(len(self.replicas)) if self.healthy[i]]
+            if not idx:
+                return
+            views = [QueueState(tasks=self.replicas[i].queue_len(),
+                                weight=self.replicas[i].queued_weight(),
+                                cap=self.replicas[i].capacity()) for i in idx]
+            j = self.policy.pick(self.backlog[0].weight, views)
+            if j is None:
+                return                       # every healthy replica full
+            i = idx[j]
+            req = self.backlog.popleft()
+            try:
+                self.replicas[i].admit(req)
+            except RuntimeError as e:
+                # Scheduler race: the policy saw a free slot that is gone.
+                # Requeue instead of crashing the engine loop.
+                if not self._requeue(req, f"admit: {e!r}"):
+                    continue
+                self.backlog.appendleft(req)
+                return
+            except Exception as e:
+                self._evict(i, f"admit raised: {e!r}")
+                self.backlog.appendleft(req)
+                continue
+            self._inflight[req.uid] = (req, i)
 
+    def _requeue(self, req: Request, detail: str) -> bool:
+        """Charge one requeue; False = budget exhausted (request failed)."""
+        n = self._requeues.get(req.uid, 0)
+        if n >= self.max_requeues:
+            self.failed.append(RequestFailure(
+                req.uid, "requeue_exhausted", detail))
+            return False
+        self._requeues[req.uid] = n + 1
+        return True
+
+    # ------------------------------------------------------------- failover
+    def _evict(self, i: int, detail: str) -> None:
+        """Remove replica i from service; re-admit its in-flight requests."""
+        if not self.healthy[i]:
+            return
+        self.healthy[i] = False
+        rep = self.replicas[i]
+        try:
+            uids = rep.active_uids()
+        except Exception:
+            uids = [u for u, (_, j) in self._inflight.items() if j == i]
+        for uid in uids:
+            ent = self._inflight.pop(uid, None)
+            if ent is None:
+                continue
+            req, _ = ent
+            if self._requeue(req, f"replica {i} evicted: {detail}"):
+                self.backlog.appendleft(req)
+
+    def _expire_deadlines(self) -> None:
+        for uid, (req, i) in list(self._inflight.items()):
+            ddl = req.deadline_ticks or self.default_deadline_ticks
+            if ddl is None or self._tick - self._submit_tick[uid] < ddl:
+                continue
+            del self._inflight[uid]
+            partial: list[int] = []
+            if self.healthy[i]:
+                try:
+                    partial = self.replicas[i].release(uid)
+                except Exception:
+                    pass
+            self.failed.append(RequestFailure(
+                uid, "timeout", f"deadline {ddl} ticks exceeded", partial))
+        for req in [r for r in self.backlog]:
+            ddl = req.deadline_ticks or self.default_deadline_ticks
+            if ddl is not None and self._tick - self._submit_tick[req.uid] >= ddl:
+                self.backlog.remove(req)
+                self.failed.append(RequestFailure(
+                    req.uid, "timeout", f"deadline {ddl} ticks exceeded "
+                    "while queued"))
+
+    def _fail_remaining(self, reason: str, detail: str) -> None:
+        for uid, (req, i) in list(self._inflight.items()):
+            partial = []
+            if self.healthy[i]:
+                try:
+                    partial = self.replicas[i].release(uid)
+                except Exception:
+                    pass
+            self.failed.append(RequestFailure(uid, reason, detail, partial))
+        self._inflight.clear()
+        while self.backlog:
+            req = self.backlog.popleft()
+            self.failed.append(RequestFailure(req.uid, reason, detail))
+
+    # ------------------------------------------------------------- main loop
     def run_until_drained(self, *, max_ticks: int = 10_000
                           ) -> list[Completion]:
+        """Tick until every submitted request has a terminal record.
+
+        Returns the completions (as before); explicit failure/timeout
+        records accumulate in ``self.failed`` — nothing is dropped silently,
+        including at ``max_ticks``.
+        """
         for _ in range(max_ticks):
+            self._tick += 1
+            if self.heartbeat is not None:
+                for h in self.heartbeat.failed(now=self._tick):
+                    if h.startswith("replica"):
+                        i = int(h[len("replica"):])
+                        if 0 <= i < len(self.replicas) and self.healthy[i]:
+                            self._evict(i, "heartbeat timeout")
             self._admit_backlog()
             busy = False
-            for r in self.replicas:
-                done = r.tick()
-                self.completed.extend(done)
-                busy |= r.queue_len() > 0
-            if not busy and not self.backlog:
+            for i, rep in enumerate(self.replicas):
+                if not self.healthy[i]:
+                    continue
+                try:
+                    done = rep.tick()
+                except Exception as e:
+                    self._evict(i, f"tick raised: {e!r}")
+                    continue
+                if self.heartbeat is not None:
+                    self.heartbeat.beat(f"replica{i}", now=self._tick)
+                for c in done:
+                    self._inflight.pop(c.uid, None)
+                    self.completed.append(c)
+                busy |= rep.queue_len() > 0
+            self._expire_deadlines()
+            if not any(self.healthy) and (self.backlog or self._inflight):
+                self._fail_remaining("no_replicas",
+                                     "all replicas evicted")
                 break
+            if not busy and not self.backlog and not self._inflight:
+                break
+        else:
+            self._fail_remaining(
+                "max_ticks", f"undrained after {max_ticks} ticks")
         return self.completed
+
+    def stats(self) -> dict[str, Any]:
+        """Serving-side failure breakdown (mirrors ``Farm.stats()``)."""
+        reasons: dict[str, int] = {}
+        for f in self.failed:
+            reasons[f.reason] = reasons.get(f.reason, 0) + 1
+        return dict(
+            ticks=self._tick,
+            completed=len(self.completed),
+            failed=len(self.failed),
+            failed_by_reason=reasons,
+            requeues=sum(self._requeues.values()),
+            evicted_replicas=[i for i, h in enumerate(self.healthy) if not h],
+            healthy_replicas=sum(self.healthy),
+        )

@@ -33,6 +33,37 @@ import numpy as np
 _MANIFEST = "manifest.json"
 _SAVE_SEQ = itertools.count()
 
+#: tmp.* directories older than this (seconds) are presumed abandoned by a
+#: crashed writer and are garbage-collected by :func:`latest_valid`.
+TMP_GC_AGE = 3600.0
+
+
+class SaveHandle(str):
+    """Path-like result of :func:`save`.
+
+    Behaves as the checkpoint path string (back-compatible) and, for
+    ``blocking=False`` saves, carries the writer thread: ``wait()`` joins it
+    and **re-raises** any exception the writer hit — async write errors no
+    longer vanish inside a daemon thread.
+    """
+
+    _thread: threading.Thread | None = None
+    _box: dict | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._thread is None or not self._thread.is_alive()
+
+    def wait(self, timeout: float | None = None) -> str:
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(f"checkpoint writer for {self} still "
+                                   f"running after {timeout}s")
+        if self._box and self._box.get("exc") is not None:
+            raise self._box["exc"]
+        return str(self)
+
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
@@ -58,8 +89,14 @@ def _from_storable(arr: np.ndarray, dtype: str, shape) -> np.ndarray:
 
 
 def save(directory: str, step: int, tree: Any, *, extra: dict | None = None,
-         blocking: bool = True) -> str:
-    """Write checkpoint ``<directory>/step_<step>``; returns its path."""
+         blocking: bool = True) -> SaveHandle:
+    """Write checkpoint ``<directory>/step_<step>``.
+
+    Returns a :class:`SaveHandle` (a ``str`` of the final path).  With
+    ``blocking=False`` the write happens on a daemon thread; call
+    ``handle.wait()`` before relying on the checkpoint — it re-raises any
+    writer exception instead of losing it.
+    """
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)   # synchronous snapshot = consistency point
     final = os.path.join(directory, f"step_{step:010d}")
@@ -83,11 +120,22 @@ def save(directory: str, step: int, tree: Any, *, extra: dict | None = None,
             shutil.rmtree(final)
         os.replace(tmp, final)
 
+    handle = SaveHandle(final)
     if blocking:
         write()
-    else:
-        threading.Thread(target=write, daemon=True).start()
-    return final
+        return handle
+    box: dict = {"exc": None}
+
+    def run():
+        try:
+            write()
+        except BaseException as e:      # surfaced by SaveHandle.wait()
+            box["exc"] = e
+
+    t = threading.Thread(target=run, daemon=True)
+    handle._thread, handle._box = t, box
+    t.start()
+    return handle
 
 
 def verify(path: str) -> bool:
@@ -104,9 +152,36 @@ def verify(path: str) -> bool:
         return False
 
 
-def latest_valid(directory: str) -> str | None:
+def gc_stale_tmp(directory: str, *, max_age: float = TMP_GC_AGE) -> list[str]:
+    """Delete ``tmp.*`` directories older than ``max_age`` seconds.
+
+    Crashed async writers leave these behind (the atomic ``os.replace``
+    never ran); anything older than ``max_age`` cannot belong to a live
+    writer and is reclaimed.  Returns the removed paths.
+    """
+    import shutil
+    import time
+    removed = []
+    now = time.time()
+    for d in os.listdir(directory):
+        if not d.startswith("tmp."):
+            continue
+        path = os.path.join(directory, d)
+        try:
+            if now - os.path.getmtime(path) >= max_age:
+                shutil.rmtree(path, ignore_errors=True)
+                removed.append(path)
+        except OSError:
+            continue
+    return removed
+
+
+def latest_valid(directory: str, *,
+                 gc_tmp_age: float | None = TMP_GC_AGE) -> str | None:
     if not os.path.isdir(directory):
         return None
+    if gc_tmp_age is not None:
+        gc_stale_tmp(directory, max_age=gc_tmp_age)
     steps = sorted((d for d in os.listdir(directory)
                     if d.startswith("step_")), reverse=True)
     for d in steps:

@@ -28,7 +28,7 @@ import time
 from collections import defaultdict, deque
 from typing import Sequence
 
-from repro.core.scheduler import WS, QueueState
+from repro.core.scheduler import WS, HealthWS, QueueState
 
 TP_ANCHOR = 16   # model-axis width the fleet's divisibility is built on
 
@@ -125,3 +125,54 @@ class StragglerMonitor:
         meds = {h: self._median(list(v)) for h, v in self.times.items() if v}
         fleet = self._median(list(meds.values()))
         return {h: fleet / m for h, m in meds.items()}
+
+
+class FarmHealth:
+    """Bridge the farm's execution events into the control plane.
+
+    The supervised farm (:class:`repro.core.farm.Farm`) calls ``on_task``
+    per completed attempt and ``on_worker_dead`` per lost worker; this class
+    feeds those events into :class:`HeartbeatMonitor` (liveness) and
+    :class:`StragglerMonitor` (per-worker speed), and closes the loop by
+    producing the :class:`~repro.core.scheduler.HealthWS` policy that scales
+    the paper's WS weights with observed worker health — straggler-aware,
+    dead-worker-avoiding task placement.  Worker ``i`` is host ``"w{i}"`` in
+    both monitors.
+    """
+
+    def __init__(self, n_workers: int, *,
+                 heartbeat: HeartbeatMonitor | None = None,
+                 straggler: StragglerMonitor | None = None):
+        self.n_workers = n_workers
+        self.heartbeat = heartbeat or HeartbeatMonitor()
+        self.straggler = straggler or StragglerMonitor()
+        self.dead: set[int] = set()
+
+    @staticmethod
+    def host(idx: int) -> str:
+        return f"w{idx}"
+
+    # -- farm-side hooks -----------------------------------------------------
+    def on_task(self, idx: int, seconds: float,
+                now: float | None = None) -> None:
+        self.straggler.record(self.host(idx), seconds)
+        self.heartbeat.beat(self.host(idx), now=now)
+
+    def on_worker_dead(self, idx: int) -> None:
+        self.dead.add(idx)
+
+    # -- scheduler-side view -------------------------------------------------
+    def speeds(self, now: float | None = None) -> dict[int, float]:
+        """Per-worker speed factors; 0.0 = do not schedule (dead/silent)."""
+        w = self.straggler.ws_weights()
+        failed = set(self.heartbeat.failed(now))
+        out: dict[int, float] = {}
+        for i in range(self.n_workers):
+            if i in self.dead or self.host(i) in failed:
+                out[i] = 0.0
+            else:
+                out[i] = w.get(self.host(i), 1.0)
+        return out
+
+    def policy(self) -> HealthWS:
+        return HealthWS(self.speeds)

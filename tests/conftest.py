@@ -5,6 +5,8 @@ CPU device; only the dry-run (and the subprocess in test_dryrun_small)
 fakes a device count.
 """
 
+import threading
+
 import numpy as np
 import pytest
 
@@ -12,6 +14,31 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def run_with_timeout(fn, seconds=30.0):
+    """Run ``fn`` on a daemon thread; fail (don't hang) if it deadlocks.
+
+    Backstop for the fault-path tests: they must *fail* on a regression of
+    the farm/engine termination guarantees even when pytest-timeout is not
+    installed.  Exceptions from ``fn`` are re-raised in the caller.
+    """
+    box = {}
+
+    def target():
+        try:
+            box["val"] = fn()
+        except BaseException as e:   # pragma: no cover - surfaced below
+            box["exc"] = e
+
+    t = threading.Thread(target=target, daemon=True)
+    t.start()
+    t.join(seconds)
+    if t.is_alive():
+        pytest.fail(f"deadlock: call did not finish within {seconds}s")
+    if "exc" in box:
+        raise box["exc"]
+    return box["val"]
 
 
 def make_tree_dataset(rng, n=300, *, n_cont=2, n_disc=2, n_classes=2,

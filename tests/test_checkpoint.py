@@ -67,6 +67,47 @@ def test_async_save_lands(tmp_path):
     assert ckpt.latest_valid(str(tmp_path)).endswith("step_0000000003")
 
 
+def test_async_save_handle_reraises_writer_errors(tmp_path, monkeypatch):
+    """blocking=False errors must surface via wait(), not vanish."""
+    s = _state()
+
+    def boom(*a, **k):
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(ckpt.np, "save", boom)
+    handle = ckpt.save(str(tmp_path), 1, s, blocking=False)
+    with pytest.raises(RuntimeError, match="disk full"):
+        handle.wait(timeout=30)
+    assert handle.done
+    assert ckpt.latest_valid(str(tmp_path)) is None   # nothing half-landed
+
+
+def test_async_save_handle_is_pathlike(tmp_path):
+    s = _state()
+    handle = ckpt.save(str(tmp_path), 4, s, blocking=False)
+    assert handle.wait(timeout=30).endswith("step_0000000004")
+    assert os.path.isdir(handle)            # usable as a plain path string
+    assert handle.done
+    assert ckpt.verify(handle)
+
+
+def test_latest_valid_gc_collects_stale_tmp_dirs(tmp_path):
+    s = _state()
+    ckpt.save(str(tmp_path), 1, s)
+    # a crashed writer's leftover: tmp dir that never reached os.replace
+    stale = tmp_path / "tmp.9.1234.0"
+    stale.mkdir()
+    (stale / "leaf.npy").write_bytes(b"partial")
+    old = 1.0                               # epoch 1970: definitely stale
+    os.utime(stale, (old, old))
+    fresh = tmp_path / "tmp.10.1234.1"      # a live writer: must survive
+    fresh.mkdir()
+    latest = ckpt.latest_valid(str(tmp_path))
+    assert latest.endswith("step_0000000001")
+    assert not stale.exists()
+    assert fresh.exists()
+
+
 def test_train_resume_equivalence(tmp_path):
     """Train 4 steps straight == train 2, crash, resume, train 2 more."""
     from repro.launch.train import train

@@ -1,0 +1,143 @@
+"""Serving engine fault tolerance: replica failover, deadlines, drain.
+
+Uses the same reduced model as test_serve.py; replicas are killed through
+the deterministic :class:`~repro.core.faults.ChaosReplica` proxy.  The
+invariant under test: every submitted request ends as exactly one
+``Completion`` or one explicit ``RequestFailure`` — never silently dropped.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.core.faults import ChaosReplica
+from repro.models.model import build_model
+from repro.serve.engine import Replica, Request, ServingEngine
+from repro.train.elastic import HeartbeatMonitor
+
+pytestmark = pytest.mark.timeout(600)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = cfgbase.reduced(cfgbase.get_config("yi_6b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n, *, seed=0, max_new=4, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(4, 20))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new, **kw)
+            for i in range(n)]
+
+
+def _terminal_uids(eng):
+    return sorted([c.uid for c in eng.completed] +
+                  [f.uid for f in eng.failed])
+
+
+def test_replica_killed_mid_run_fails_over(small_model):
+    cfg, model, params = small_model
+    victim = ChaosReplica(Replica(model, params, n_slots=2, max_seq=64),
+                          fail_at_tick=2)
+    survivor = Replica(model, params, n_slots=2, max_seq=64)
+    eng = ServingEngine([victim, survivor], max_requeues=2)
+    reqs = _requests(cfg, 6)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_ticks=500)
+    # accounting: every request has exactly one terminal record
+    assert _terminal_uids(eng) == list(range(6))
+    assert eng.healthy == [False, True]
+    # the victim's in-flight requests were re-admitted and completed
+    assert len(eng.completed) == 6
+    assert eng.stats()["requeues"] >= 1
+    assert eng.stats()["evicted_replicas"] == [0]
+
+
+def test_all_replicas_dead_reports_every_request(small_model):
+    cfg, model, params = small_model
+    rep = ChaosReplica(Replica(model, params, n_slots=2, max_seq=64),
+                       fail_at_tick=1)
+    eng = ServingEngine([rep])
+    for r in _requests(cfg, 4):
+        eng.submit(r)
+    out = eng.run_until_drained(max_ticks=200)
+    assert out == []
+    assert _terminal_uids(eng) == list(range(4))
+    reasons = {f.reason for f in eng.failed}
+    assert reasons <= {"no_replicas", "requeue_exhausted"}
+    assert eng.stats()["healthy_replicas"] == 0
+
+
+def test_admit_race_requeues_instead_of_crashing(small_model):
+    cfg, model, params = small_model
+    rep = ChaosReplica(Replica(model, params, n_slots=2, max_seq=64),
+                       admit_failures=1)
+    eng = ServingEngine([rep], max_requeues=3)
+    for r in _requests(cfg, 3):
+        eng.submit(r)
+    eng.run_until_drained(max_ticks=300)
+    assert sorted(c.uid for c in eng.completed) == [0, 1, 2]
+    assert eng.failed == []
+    assert eng.healthy == [True]           # a race is not a replica death
+
+
+def test_request_deadline_yields_explicit_timeout(small_model):
+    cfg, model, params = small_model
+    eng = ServingEngine([Replica(model, params, n_slots=2, max_seq=128)])
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=64,
+                       deadline_ticks=3))
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=2))
+    eng.run_until_drained(max_ticks=300)
+    assert [c.uid for c in eng.completed] == [1]
+    (fail,) = eng.failed
+    assert (fail.uid, fail.reason) == (0, "timeout")
+    assert 0 < len(fail.tokens) < 64       # partial decode surfaced
+
+
+def test_max_ticks_reports_undrained_requests(small_model):
+    cfg, model, params = small_model
+    eng = ServingEngine([Replica(model, params, n_slots=1, max_seq=64)])
+    for r in _requests(cfg, 3, max_new=8):
+        eng.submit(r)
+    eng.run_until_drained(max_ticks=2)     # nowhere near enough
+    assert _terminal_uids(eng) == [0, 1, 2]
+    assert any(f.reason == "max_ticks" for f in eng.failed)
+
+
+def test_heartbeat_eviction_requeues_inflight(small_model):
+    cfg, model, params = small_model
+    reps = [Replica(model, params, n_slots=2, max_seq=64) for _ in range(2)]
+    hb = HeartbeatMonitor(timeout=5)       # measured in engine ticks
+    eng = ServingEngine(reps, heartbeat=hb, max_requeues=2)
+    # replica0 reported a beat far in the past: declared failed on tick 1
+    hb.beat("replica0", now=-100)
+    for r in _requests(cfg, 4):
+        eng.submit(r)
+    eng.run_until_drained(max_ticks=500)
+    assert eng.healthy == [False, True]
+    assert len(eng.completed) == 4
+    assert _terminal_uids(eng) == list(range(4))
+
+
+def test_failure_breakdown_stats(small_model):
+    cfg, model, params = small_model
+    rep = ChaosReplica(Replica(model, params, n_slots=2, max_seq=64),
+                       fail_at_tick=1)
+    eng = ServingEngine([rep])
+    for r in _requests(cfg, 2):
+        eng.submit(r)
+    eng.run_until_drained(max_ticks=100)
+    s = eng.stats()
+    assert s["completed"] == 0 and s["failed"] == 2
+    assert sum(s["failed_by_reason"].values()) == 2
+    assert s["evicted_replicas"] == [0]
