@@ -1,0 +1,111 @@
+"""Gate benchmark runs against a committed ``BENCH_*.json`` baseline.
+
+Compares the per-step timing trajectory a figure script just produced
+(``BENCH_OUT``) with the baseline committed in the repo, and exits
+nonzero when any variant's mean time over the *common* steps regressed
+past ``--tolerance`` (a fraction: 0.15 = +15%).
+
+Structural keys (dataset, n_attrs, max_bins, frontier_slots) must match —
+a timing diff between different problems is noise, so that's an error.
+Environment keys (backend, scale, n_cases) may legitimately differ between
+a CI smoke run and the committed full-size baseline; they are reported as
+warnings and the caller widens ``--tolerance`` accordingly (CI passes a
+deliberately generous one — the smoke gate is for order-of-magnitude
+blowups and broken artifacts, not microbenchmark precision).
+
+Usage::
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_superstep.json --current bench_current.json \
+        [--tolerance 0.15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: These must agree or the comparison is meaningless.
+STRUCTURAL = ("dataset", "n_attrs", "max_bins", "frontier_slots")
+#: These may differ (smoke vs full baseline) — warn, don't fail.
+ENVIRONMENT = ("backend", "scale", "n_cases", "compact_min_bucket")
+
+
+def compare(baseline: dict, current: dict,
+            tolerance: float) -> tuple[list[str], list[str]]:
+    """Return (errors, warnings); empty errors = gate passes."""
+    errors: list[str] = []
+    warnings: list[str] = []
+
+    for k in STRUCTURAL:
+        b, c = baseline.get(k), current.get(k)
+        if b is not None and c is not None and b != c:
+            errors.append(f"structural mismatch: {k}={c!r} "
+                          f"(baseline {b!r})")
+    if errors:
+        return errors, warnings
+    for k in ENVIRONMENT:
+        b, c = baseline.get(k), current.get(k)
+        if b is not None and c is not None and b != c:
+            warnings.append(f"environment differs: {k}={c!r} "
+                            f"(baseline {b!r})")
+
+    by_step = {s["step"]: s for s in baseline.get("steps", [])}
+    common = [(by_step[s["step"]], s) for s in current.get("steps", [])
+              if s["step"] in by_step]
+    if not common:
+        errors.append("no common steps between baseline and current run")
+        return errors, warnings
+
+    keys = sorted(k for k in common[0][0]
+                  if k.startswith("t_") and k.endswith("_s")
+                  and k in common[0][1])
+    if not keys:
+        errors.append("no common t_*_s timing keys")
+        return errors, warnings
+
+    for k in keys:
+        base = sum(b[k] for b, _ in common) / len(common)
+        cur = sum(c[k] for _, c in common) / len(common)
+        ratio = cur / base if base > 0 else float("inf")
+        line = (f"{k:24s} baseline {base * 1e6:10.1f}us  "
+                f"current {cur * 1e6:10.1f}us  x{ratio:.3f}  "
+                f"({len(common)} steps)")
+        if ratio > 1.0 + tolerance:
+            errors.append(f"REGRESSION {line}  (tolerance +{tolerance:.0%})")
+        else:
+            warnings.append(f"ok         {line}")
+    return errors, warnings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json to compare against")
+    ap.add_argument("--current", required=True,
+                    help="artifact the benchmark run just wrote (BENCH_OUT)")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed fractional slowdown (default 0.15 = +15%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    errors, notes = compare(baseline, current, args.tolerance)
+    for n in notes:
+        print(n)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"FAIL: {len(errors)} problem(s) vs {args.baseline}",
+              file=sys.stderr)
+        return 1
+    print(f"PASS: within +{args.tolerance:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,6 +52,8 @@ import time
 from typing import Any, Callable
 
 from repro.core.scheduler import Policy, WS
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 GO_ON = object()   # FF_GO_ON: emitter consumed the feedback, keep running.
 
@@ -203,7 +205,9 @@ class Farm:
 
     def __init__(self, n_workers: int, *, policy: Policy | None = None,
                  queue_size: int = 4096, fault: FaultPolicy | None = None,
-                 health: Any | None = None):
+                 health: Any | None = None,
+                 tracer: obs_trace.Tracer | None = None,
+                 metrics: obs_metrics.Registry | None = None):
         if n_workers < 1:
             raise ValueError("farm needs at least one worker")
         self.health = health
@@ -219,6 +223,23 @@ class Farm:
         self._rng = random.Random(self.fault.seed)
         self._stats = dict(failures=0, retries=0, requeues=0, timeouts=0,
                            quarantined=0, dropped_late=0)
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
+        reg = metrics if metrics is not None else obs_metrics.REGISTRY
+        self._m_dispatch = reg.counter(
+            "farm_dispatch_total", "task attempts placed on worker queues")
+        self._m_done = reg.counter(
+            "farm_tasks_done_total", "task attempts completed ok")
+        self._m_events = reg.counter(
+            "farm_events_total", "supervision events, by event= label")
+        self._m_task_s = reg.histogram(
+            "farm_task_seconds", "worker_svc wall time per attempt")
+        self._m_qweight = reg.gauge(
+            "farm_queued_weight", "per-worker queued+running WS weight")
+
+    def _bump(self, key: str) -> None:
+        """One supervision event: mirror ``_stats`` into the metrics."""
+        self._stats[key] += 1
+        self._m_events.inc(event=key)
 
     # ------------------------------------------------------------------ run
     def run(self,
@@ -272,6 +293,13 @@ class Farm:
             wk = self.workers[i]
             wk.add_load(rec.weight)
             wk.q.put((task_id, rec.attempt, rec.payload, rec.weight))
+            self._m_dispatch.inc()
+            qw = wk.queued_weight()
+            self._m_qweight.set(qw, worker=i)
+            self.tracer.instant("task.dispatch", task=task_id,
+                                attempt=rec.attempt, worker=i,
+                                weight=rec.weight)
+            self.tracer.counter(f"w{i}.queued_weight", weight=qw)
 
         def send_out(payload: Any, weight: float = 1.0) -> None:
             task_id = next_id()
@@ -282,19 +310,23 @@ class Farm:
         def on_failure(task_id: int, err: str) -> None:
             rec = pending[task_id]
             rec.failures += 1
-            self._stats["failures"] += 1
+            self._bump("failures")
             if rec.failures >= self.fault.attempts_allowed():
                 del pending[task_id]
                 fail = TaskFailure(payload=rec.payload, weight=rec.weight,
                                    failures=rec.failures, error=err)
                 self.quarantined.append(fail)
-                self._stats["quarantined"] += 1
+                self._bump("quarantined")
+                self.tracer.instant("task.quarantine", task=task_id,
+                                    failures=rec.failures, error=err)
                 notify.append(fail)      # delivered outside the dispatch path
                 return
-            self._stats["retries"] += 1
+            self._bump("retries")
             rec.attempt += 1
             rec.waiting_retry = True
             delay = self.fault.backoff(rec.failures, self._rng)
+            self.tracer.instant("task.retry", task=task_id,
+                                failures=rec.failures, backoff_s=delay)
             heapq.heappush(retry_heap, (time.monotonic() + delay, task_id))
 
         def handle_died(msg) -> None:
@@ -310,6 +342,8 @@ class Farm:
             if not wk.alive:
                 return
             wk.alive = False
+            self._m_events.inc(event="worker_death")
+            self.tracer.instant("worker.death", worker=wk.idx, why=why)
             if self.health is not None:
                 self.health.on_worker_dead(wk.idx)
             cur = wk.current
@@ -328,7 +362,9 @@ class Farm:
                 rec = pending.get(task_id)
                 if rec is None or rec.attempt != attempt:
                     continue
-                self._stats["requeues"] += 1
+                self._bump("requeues")
+                self.tracer.instant("task.requeue", task=task_id,
+                                    worker=wk.idx)
                 dispatch(task_id)
             if cur is not None:
                 task_id, attempt, _ = cur
@@ -350,7 +386,9 @@ class Farm:
                 wk.current = (task_id, attempt, time.perf_counter())
                 t0 = time.perf_counter()
                 try:
-                    result = worker_svc(payload)
+                    with self.tracer.span("task", task=task_id,
+                                          attempt=attempt, worker=wk.idx):
+                        result = worker_svc(payload)
                 except WorkerCrashed as e:
                     wk.current = None
                     wk.done_weight(weight)
@@ -374,7 +412,8 @@ class Farm:
         # ---------------- emitter ------------------------------------------
         def run_emitter(task: Any) -> None:
             t0 = time.perf_counter()
-            emitter_svc(task, send_out)
+            with self.tracer.span("emitter"):
+                emitter_svc(task, send_out)
             self.emitter_busy += time.perf_counter() - t0
 
         threads = [threading.Thread(target=worker_loop, args=(w,), daemon=True)
@@ -413,11 +452,17 @@ class Farm:
                     rec = pending.get(task_id)
                     if rec is None or rec.attempt != attempt \
                             or rec.waiting_retry:
-                        self._stats["dropped_late"] += 1  # superseded attempt
+                        self._bump("dropped_late")        # superseded attempt
                     elif kind == "ok":
                         result, dt = msg[4], msg[5]
                         if self.health is not None:
                             self.health.on_task(widx, dt)
+                        self._m_done.inc()
+                        self._m_task_s.observe(dt)
+                        qw = self.workers[widx].queued_weight()
+                        self._m_qweight.set(qw, worker=widx)
+                        self.tracer.counter(f"w{widx}.queued_weight",
+                                            weight=qw)
                         del pending[task_id]
                         run_emitter(result)
                     else:                          # "fail"
@@ -453,7 +498,8 @@ class Farm:
         for wk in self.workers:
             cur = wk.current
             if wk.alive and cur is not None and now - cur[2] > ddl:
-                self._stats["timeouts"] += 1
+                self._bump("timeouts")
+                self.tracer.instant("worker.timeout", worker=wk.idx)
                 on_worker_death(
                     wk, f"deadline: worker {wk.idx} over {ddl:.3f}s budget")
 

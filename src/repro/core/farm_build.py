@@ -63,13 +63,18 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
           n_workers: int = 4, policy: Policy | None = None,
           fault: FaultPolicy | None = None, injector: Any = None,
           capacity: int | None = None, strict: bool = True,
-          stats_out: dict | None = None) -> Tree:
+          stats_out: dict | None = None, tracer: Any = None,
+          metrics: Any = None) -> Tree:
     """Grow a C4.5 tree through the supervised farm; oracle-equal result.
 
     ``injector``  — optional :class:`repro.core.faults.FaultInjector`; its
                     ``wrap_worker`` is applied to the node-split service.
     ``stats_out`` — optional dict filled with the farm's execution + failure
                     breakdown (``Farm.stats()``).
+    ``tracer`` / ``metrics`` — optional :class:`repro.obs.trace.Tracer` /
+                    :class:`repro.obs.metrics.Registry`; the farm records
+                    task spans, retry/quarantine/death events and
+                    queued-weight timelines into them.
     """
     nodes = c45._Nodes.new()
     order: deque[int] = deque()        # emission (= BFS) order, apply cursor
@@ -132,7 +137,8 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
             ds, cfg, idx=t.idx, w=t.w, active=t.active, depth=t.depth,
             freq=t.freq, cls=t.cls)
 
-    farm = Farm(n_workers, policy=policy, fault=fault)
+    farm = Farm(n_workers, policy=policy, fault=fault, tracer=tracer,
+                metrics=metrics)
     svc = injector.wrap_worker(worker) if injector is not None else worker
     stats = farm.run(emitter, svc)
     if stats_out is not None:

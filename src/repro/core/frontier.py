@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
@@ -183,20 +184,18 @@ def _gains(hist, total_w, attr_is_cont, n_bins, *, prob: FrontierProblem,
 
 
 # --------------------------------------------------------------------------
-# One superstep = splitPre + splitAtt + splitPost over K open nodes
+# One superstep = splitPre + splitAtt + splitPost over K open nodes.
+# The phases are separate jit-able functions so the observability path
+# (build(collect_stats=True, tracer=...)) can time each one; ``superstep``
+# composes them and is what the fused whole-build while_loop traces.
 # --------------------------------------------------------------------------
 
-def superstep(
-    state: GrowState,
-    x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
-    attr_is_cont: jnp.ndarray, n_bins: jnp.ndarray,
-    *, prob: FrontierProblem, impl: str = "jnp",
-) -> tuple[GrowState, dict[str, jnp.ndarray]]:
+def split_pre(state: GrowState, *, prob: FrontierProblem
+              ) -> dict[str, jnp.ndarray]:
+    """Frontier selection + stop tests on stored node frequencies."""
     cfg = prob.cfg
     m = cfg.max_nodes
     k = cfg.frontier_slots
-    a_dim, b_dim, c_dim, h_dim = (prob.n_attrs, prob.n_bins_max,
-                                  prob.n_classes, prob.max_children)
     tree = state.tree
 
     # ---- select up to K open nodes, FIFO by id (= breadth-first) ----------
@@ -209,7 +208,7 @@ def superstep(
         jnp.arange(k, dtype=jnp.int32), mode="drop")
     slot = node_to_slot[state.case_node]                      # (N,)
 
-    # ---- splitPre: stop tests on stored frequencies ------------------------
+    # ---- stop tests on stored frequencies ----------------------------------
     freq = jnp.where(valid[:, None], tree.node_freq[ids_safe], 0.0)  # (K, C)
     total_w = jnp.sum(freq, axis=-1)
     depth_k = tree.node_depth[ids_safe]
@@ -217,23 +216,49 @@ def superstep(
     small = total_w < 2.0 * cfg.min_objs
     deep = depth_k >= cfg.max_depth
     pre_leaf = pure | small | deep
+    return dict(ids=ids, valid=valid, ids_safe=ids_safe, slot=slot,
+                total_w=total_w, depth_k=depth_k, pre_leaf=pre_leaf)
 
-    # ---- splitAtt: fused histogram + gain over (node, attribute) ----------
+
+def split_att(state: GrowState, pre: dict,
+              x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+              attr_is_cont: jnp.ndarray, n_bins: jnp.ndarray,
+              *, prob: FrontierProblem, impl: str) -> dict[str, jnp.ndarray]:
+    """The hot phase: fused histogram + gain over (node, attribute)."""
+    b_dim = prob.n_bins_max
     from repro.sharding.act import shard_frontier_hist
     hist_u = shard_frontier_hist(
-        _histogram(x, y, w, slot, prob=prob, impl=impl))      # (K,A,B+1,C)
+        _histogram(x, y, w, pre["slot"], prob=prob, impl=impl))  # (K,A,B+1,C)
     hist = hist_u[:, :, :b_dim, :]
     unknown = hist_u[:, :, b_dim, :]                          # (K, A, C)
     score, split_bin = _gains(
-        hist, total_w, attr_is_cont, n_bins, prob=prob, impl=impl)  # (K, A)
-    active_k = state.active[ids_safe] & valid[:, None]
+        hist, pre["total_w"], attr_is_cont, n_bins,
+        prob=prob, impl=impl)                                 # (K, A)
+    active_k = state.active[pre["ids_safe"]] & pre["valid"][:, None]
     best_attr, best_score, has_split = entropy.pick_best_attribute(
         score, active_k)
+    return dict(hist=hist, unknown=unknown, split_bin=split_bin,
+                active_k=active_k, best_attr=best_attr, has_split=has_split)
 
-    # ---- splitPost: argmax done; allocate + route ---------------------------
-    internal = valid & ~pre_leaf & has_split
+
+def split_post(state: GrowState, pre: dict, att: dict,
+               x: jnp.ndarray, attr_is_cont: jnp.ndarray,
+               n_bins: jnp.ndarray, *, prob: FrontierProblem,
+               ) -> tuple[GrowState, dict[str, jnp.ndarray]]:
+    """Argmax done: allocate children, scatter results, route cases."""
+    cfg = prob.cfg
+    m = cfg.max_nodes
+    k = cfg.frontier_slots
+    a_dim, c_dim, h_dim = prob.n_attrs, prob.n_classes, prob.max_children
+    tree = state.tree
+    ids, valid, ids_safe = pre["ids"], pre["valid"], pre["ids_safe"]
+    slot, total_w, depth_k = pre["slot"], pre["total_w"], pre["depth_k"]
+    hist, unknown, active_k = att["hist"], att["unknown"], att["active_k"]
+    best_attr = att["best_attr"]
+
+    internal = valid & ~pre["pre_leaf"] & att["has_split"]
     is_cont = attr_is_cont[best_attr]
-    sb = jnp.take_along_axis(split_bin, best_attr[:, None], 1)[:, 0]
+    sb = jnp.take_along_axis(att["split_bin"], best_attr[:, None], 1)[:, 0]
     nch_attr = jnp.where(is_cont, 2, n_bins[best_attr]).astype(jnp.int32)
     nch = jnp.where(internal, nch_attr, 0)
 
@@ -357,6 +382,19 @@ def superstep(
     return new_state, stats
 
 
+def superstep(
+    state: GrowState,
+    x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+    attr_is_cont: jnp.ndarray, n_bins: jnp.ndarray,
+    *, prob: FrontierProblem, impl: str = "jnp",
+) -> tuple[GrowState, dict[str, jnp.ndarray]]:
+    """One fused superstep: splitPre → splitAtt → splitPost."""
+    pre = split_pre(state, prob=prob)
+    att = split_att(state, pre, x, y, w, attr_is_cont, n_bins,
+                    prob=prob, impl=impl)
+    return split_post(state, pre, att, x, attr_is_cont, n_bins, prob=prob)
+
+
 # --------------------------------------------------------------------------
 # Full build
 # --------------------------------------------------------------------------
@@ -386,12 +424,22 @@ def _build_jit(x, y, w, attr_is_cont, n_bins, *, prob: FrontierProblem,
 
 def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
           impl: str = "jnp", collect_stats: bool = False,
+          tracer: Any = None, metrics: Any = None,
           ) -> Tree | tuple[Tree, list[dict[str, Any]]]:
     """Grow a C4.5 tree with the SPMD frontier engine.
 
     With ``collect_stats=True`` the superstep loop runs host-side and returns
     per-superstep scheduling statistics (NP vs NAP decisions per the
-    configured cost model — the data behind paper Fig. 15).
+    configured cost model — the data behind paper Fig. 15); the per-step
+    ``n_active``/``nap_nodes``/... values also flow into the metrics
+    registry (``metrics``, default the process-wide one).
+
+    With an *enabled* ``tracer`` (:class:`repro.obs.trace.Tracer`) the loop
+    additionally runs the three phases as separately jitted, synchronously
+    timed steps, so the exported trace shows real splitPre / splitAtt /
+    splitPost wall time per superstep.  With tracing disabled nothing
+    changes: the fused single-jit superstep (or the whole-build
+    ``while_loop``) runs exactly as before.
     """
     if cfg.unknown_fractional:
         raise ValueError("frontier engine routes unknowns to the heaviest "
@@ -402,18 +450,65 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
     w = jnp.asarray(ds.w, jnp.float32)
     cont = jnp.asarray(ds.attr_is_cont)
     nb = jnp.asarray(ds.n_bins, jnp.int32)
+    traced = tracer is not None and tracer.enabled
 
-    if not collect_stats:
+    if not collect_stats and not traced:
         state = _build_jit(x, y, w, cont, nb, prob=prob, impl=impl)
         return dataclasses.replace(state.tree, n_nodes=state.n_nodes)
 
-    step = jax.jit(_superstep_fn(prob, impl))
+    from repro.obs import metrics as obs_metrics
+    reg = metrics if metrics is not None else obs_metrics.REGISTRY
+    m_steps = reg.counter("frontier_supersteps_total")
+    m_active = reg.gauge("frontier_active_cases")
+    m_open = reg.gauge("frontier_open_nodes")
+    m_nap = reg.counter("frontier_nap_nodes_total")
+    m_children = reg.counter("frontier_children_total")
+    m_phase = reg.histogram("frontier_phase_seconds",
+                            "per-phase superstep wall time, phase= label")
+
+    if traced:
+        pre_j = jax.jit(functools.partial(split_pre, prob=prob))
+        att_j = jax.jit(functools.partial(split_att, prob=prob, impl=impl))
+        post_j = jax.jit(functools.partial(split_post, prob=prob))
+
+        def timed_phase(name, fn, *args):
+            t0 = time.perf_counter()
+            with tracer.span(name):
+                out = jax.block_until_ready(fn(*args))
+            m_phase.observe(time.perf_counter() - t0, phase=name)
+            return out
+
+        def step_fn(state, step_i):
+            with tracer.span("superstep", step=step_i):
+                pre = timed_phase("splitPre", pre_j, state)
+                att = timed_phase("splitAtt", att_j, state, pre,
+                                  x, y, w, cont, nb)
+                return timed_phase("splitPost", post_j, state, pre, att,
+                                   x, cont, nb)
+    else:
+        fused = jax.jit(_superstep_fn(prob, impl))
+
+        def step_fn(state, step_i):
+            return fused(state, x, y, w, cont, nb)
+
     state = init_state(prob, y, w)
     out: list[dict[str, Any]] = []
+    step_i = 0
     while bool(jnp.any(state.status == GrowState.STATUS_OPEN)):
-        state, stats = step(state, x, y, w, cont, nb)
-        out.append({k: np.asarray(v).item() for k, v in stats.items()})
+        state, stats = step_fn(state, step_i)
+        row = {k: np.asarray(v).item() for k, v in stats.items()}
+        out.append(row)
+        m_steps.inc()
+        m_active.set(row["n_active"])
+        m_open.set(row["n_processed"])
+        m_nap.inc(row["nap_nodes"])
+        m_children.inc(row["n_children"])
+        if traced:
+            tracer.counter("frontier.n_active", value=row["n_active"])
+        step_i += 1
     tree = dataclasses.replace(state.tree, n_nodes=state.n_nodes)
+    if not collect_stats:
+        return tree
     return tree, out
 
 

@@ -136,7 +136,13 @@ class HealthWS(WS):
         return best if best is not None else fallback
 
 
-def make_policy(name: str) -> Policy:
+def make_policy(name: str, *, speed_fn=None) -> Policy:
+    """Policy factory by name: ``drr | od | ws | health_ws``.
+
+    ``speed_fn`` is the :class:`HealthWS` hook (``{worker_index: speed}``,
+    e.g. :meth:`repro.train.elastic.FarmHealth.speeds`); with no hook every
+    worker scores speed 1.0 and ``health_ws`` degenerates to plain WS.
+    """
     name = name.lower()
     if name == "drr":
         return DRR()
@@ -144,4 +150,7 @@ def make_policy(name: str) -> Policy:
         return OD()
     if name == "ws":
         return WS()
-    raise ValueError(f"unknown scheduling policy {name!r} (drr|od|ws)")
+    if name == "health_ws":
+        return HealthWS(speed_fn if speed_fn is not None else dict)
+    raise ValueError(
+        f"unknown scheduling policy {name!r} (drr|od|ws|health_ws)")

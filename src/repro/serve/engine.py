@@ -1,11 +1,17 @@
 """Slot-batched serving engine with WS request scheduling and failover.
 
 The paper's farm is applied here as a *runtime feature* (DESIGN.md §5): a
-fleet of model replicas is a farm; requests are tasks whose weight is the
-prompt length (the serving analogue of weight = r cases at a node); the
-emitter assigns each request to the replica with the least outstanding
-weighted work — FastFlow's ``ws_scheduler`` verbatim, from
-:mod:`repro.core.scheduler`.
+fleet of model replicas is a farm; requests are tasks whose weight is
+``len(prompt) + max_new_tokens`` — the total token work the request will
+occupy a slot for, prefill plus decode (the serving analogue of weight = r
+cases at a node); the emitter assigns each request to the replica with the
+least outstanding weighted work — FastFlow's ``ws_scheduler`` verbatim,
+from :mod:`repro.core.scheduler`.  Any of the paper's policies can be
+selected by name (``drr | od | ws | health_ws``); ``od`` admits at most
+``Policy.forced_capacity`` (= 1) newly-queued requests per replica per
+tick, and admission always considers the *full* replica list with evicted
+replicas masked as zero-capacity, so round-robin state never drifts across
+a failover.
 
 Each replica runs **continuous batching** over a fixed number of cache
 slots: one jitted ``decode_step`` advances every active slot per tick;
@@ -46,6 +52,8 @@ import numpy as np
 
 from repro.core.scheduler import Policy, QueueState, make_policy
 from repro.models.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.sampling import sample
 from repro.train.elastic import HeartbeatMonitor
 
@@ -190,13 +198,32 @@ class ServingEngine:
     replica failover, bounded requeues and explicit drain accounting."""
 
     def __init__(self, replicas: list, *, policy: str | Policy = "ws",
+                 speed_fn=None,
                  heartbeat: HeartbeatMonitor | None = None,
                  heartbeat_ticks: int | None = None,
                  max_requeues: int = 2,
-                 default_deadline_ticks: int | None = None):
+                 default_deadline_ticks: int | None = None,
+                 tracer: obs_trace.Tracer | None = None,
+                 metrics: obs_metrics.Registry | None = None):
         self.replicas = replicas
         self.policy = policy if isinstance(policy, Policy) \
-            else make_policy(policy)
+            else make_policy(policy, speed_fn=speed_fn)
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
+        reg = metrics if metrics is not None else obs_metrics.REGISTRY
+        self._m_submitted = reg.counter(
+            "engine_requests_total", "requests submitted")
+        self._m_completed = reg.counter(
+            "engine_completions_total", "requests completed")
+        self._m_failed = reg.counter(
+            "engine_failures_total", "terminal failures, by reason")
+        self._m_evictions = reg.counter(
+            "engine_evictions_total", "replicas evicted")
+        self._m_requeues = reg.counter(
+            "engine_requeues_total", "requests re-admitted after a fault")
+        self._m_queue_wait = reg.histogram(
+            "engine_queue_wait_ticks", "ticks from submit to first admit")
+        self._m_latency = reg.histogram(
+            "engine_request_ticks", "ticks from submit to terminal record")
         self.heartbeat = heartbeat
         if self.heartbeat is None and heartbeat_ticks is not None:
             self.heartbeat = HeartbeatMonitor(timeout=heartbeat_ticks)
@@ -209,25 +236,44 @@ class ServingEngine:
         self._inflight: dict[int, tuple[Request, int]] = {}   # uid -> (req, i)
         self._requeues: dict[int, int] = {}
         self._submit_tick: dict[int, int] = {}
+        self._admit_tick: dict[int, int] = {}
         self._tick = 0
 
     # ------------------------------------------------------------ admission
     def submit(self, req: Request) -> None:
         self._submit_tick.setdefault(req.uid, self._tick)
+        self._m_submitted.inc()
+        self.tracer.begin("request", id=req.uid, weight=req.weight)
         self.backlog.append(req)
 
     def _admit_backlog(self) -> None:
+        # The policy always sees the *full* replica list: evicted replicas
+        # are masked as zero-capacity views, so a stateful policy's pointer
+        # (DRR._next) keeps addressing physical replicas across failover.
+        # With a forced-capacity policy (OD), "queued" means newly admitted
+        # this call — at most forced_capacity fresh requests per replica per
+        # tick, and never more than the replica's free slots.
+        forced = getattr(self.policy, "forced_capacity", None)
+        newly = [0] * len(self.replicas)
         while self.backlog:
-            idx = [i for i in range(len(self.replicas)) if self.healthy[i]]
-            if not idx:
+            if not any(self.healthy):
                 return
-            views = [QueueState(tasks=self.replicas[i].queue_len(),
-                                weight=self.replicas[i].queued_weight(),
-                                cap=self.replicas[i].capacity()) for i in idx]
-            j = self.policy.pick(self.backlog[0].weight, views)
-            if j is None:
+            views = []
+            for i, rep in enumerate(self.replicas):
+                if not self.healthy[i]:
+                    views.append(QueueState(tasks=0, weight=0.0, cap=0))
+                    continue
+                used, qw = rep.queue_len(), rep.queued_weight()
+                if forced is not None:
+                    views.append(QueueState(
+                        tasks=newly[i], weight=qw,
+                        cap=min(forced, rep.capacity() - used)))
+                else:
+                    views.append(QueueState(tasks=used, weight=qw,
+                                            cap=rep.capacity()))
+            i = self.policy.pick(self.backlog[0].weight, views)
+            if i is None:
                 return                       # every healthy replica full
-            i = idx[j]
             req = self.backlog.popleft()
             try:
                 self.replicas[i].admit(req)
@@ -242,16 +288,31 @@ class ServingEngine:
                 self._evict(i, f"admit raised: {e!r}")
                 self.backlog.appendleft(req)
                 continue
+            newly[i] += 1
             self._inflight[req.uid] = (req, i)
+            if req.uid not in self._admit_tick:
+                self._admit_tick[req.uid] = self._tick
+                self._m_queue_wait.observe(
+                    self._tick - self._submit_tick[req.uid])
+            self.tracer.instant("request.admit", uid=req.uid, replica=i)
+
+    def _fail(self, failure: RequestFailure) -> None:
+        """Record one terminal failure (the only way ``failed`` grows)."""
+        self.failed.append(failure)
+        self._m_failed.inc(reason=failure.reason)
+        self._m_latency.observe(
+            self._tick - self._submit_tick.get(failure.uid, self._tick))
+        self.tracer.end("request", id=failure.uid, outcome=failure.reason)
 
     def _requeue(self, req: Request, detail: str) -> bool:
         """Charge one requeue; False = budget exhausted (request failed)."""
         n = self._requeues.get(req.uid, 0)
         if n >= self.max_requeues:
-            self.failed.append(RequestFailure(
-                req.uid, "requeue_exhausted", detail))
+            self._fail(RequestFailure(req.uid, "requeue_exhausted", detail))
             return False
         self._requeues[req.uid] = n + 1
+        self._m_requeues.inc()
+        self.tracer.instant("request.requeue", uid=req.uid, detail=detail)
         return True
 
     # ------------------------------------------------------------- failover
@@ -260,6 +321,8 @@ class ServingEngine:
         if not self.healthy[i]:
             return
         self.healthy[i] = False
+        self._m_evictions.inc()
+        self.tracer.instant("replica.evict", replica=i, detail=detail)
         rep = self.replicas[i]
         try:
             uids = rep.active_uids()
@@ -285,13 +348,13 @@ class ServingEngine:
                     partial = self.replicas[i].release(uid)
                 except Exception:
                     pass
-            self.failed.append(RequestFailure(
+            self._fail(RequestFailure(
                 uid, "timeout", f"deadline {ddl} ticks exceeded", partial))
         for req in [r for r in self.backlog]:
             ddl = req.deadline_ticks or self.default_deadline_ticks
             if ddl is not None and self._tick - self._submit_tick[req.uid] >= ddl:
                 self.backlog.remove(req)
-                self.failed.append(RequestFailure(
+                self._fail(RequestFailure(
                     req.uid, "timeout", f"deadline {ddl} ticks exceeded "
                     "while queued"))
 
@@ -303,11 +366,11 @@ class ServingEngine:
                     partial = self.replicas[i].release(uid)
                 except Exception:
                     pass
-            self.failed.append(RequestFailure(uid, reason, detail, partial))
+            self._fail(RequestFailure(uid, reason, detail, partial))
         self._inflight.clear()
         while self.backlog:
             req = self.backlog.popleft()
-            self.failed.append(RequestFailure(req.uid, reason, detail))
+            self._fail(RequestFailure(req.uid, reason, detail))
 
     # ------------------------------------------------------------- main loop
     def run_until_drained(self, *, max_ticks: int = 10_000
@@ -320,29 +383,39 @@ class ServingEngine:
         """
         for _ in range(max_ticks):
             self._tick += 1
-            if self.heartbeat is not None:
-                for h in self.heartbeat.failed(now=self._tick):
-                    if h.startswith("replica"):
-                        i = int(h[len("replica"):])
-                        if 0 <= i < len(self.replicas) and self.healthy[i]:
-                            self._evict(i, "heartbeat timeout")
-            self._admit_backlog()
-            busy = False
-            for i, rep in enumerate(self.replicas):
-                if not self.healthy[i]:
-                    continue
-                try:
-                    done = rep.tick()
-                except Exception as e:
-                    self._evict(i, f"tick raised: {e!r}")
-                    continue
+            with self.tracer.span("engine.tick", tick=self._tick):
                 if self.heartbeat is not None:
-                    self.heartbeat.beat(f"replica{i}", now=self._tick)
-                for c in done:
-                    self._inflight.pop(c.uid, None)
-                    self.completed.append(c)
-                busy |= rep.queue_len() > 0
-            self._expire_deadlines()
+                    for h in self.heartbeat.failed(now=self._tick):
+                        if h.startswith("replica"):
+                            i = int(h[len("replica"):])
+                            if 0 <= i < len(self.replicas) \
+                                    and self.healthy[i]:
+                                self._evict(i, "heartbeat timeout")
+                with self.tracer.span("engine.admit"):
+                    self._admit_backlog()
+                busy = False
+                for i, rep in enumerate(self.replicas):
+                    if not self.healthy[i]:
+                        continue
+                    try:
+                        with self.tracer.span(f"replica{i}.tick"):
+                            done = rep.tick()
+                    except Exception as e:
+                        self._evict(i, f"tick raised: {e!r}")
+                        continue
+                    if self.heartbeat is not None:
+                        self.heartbeat.beat(f"replica{i}", now=self._tick)
+                    for c in done:
+                        self._inflight.pop(c.uid, None)
+                        self.completed.append(c)
+                        self._m_completed.inc()
+                        self._m_latency.observe(
+                            self._tick - self._submit_tick[c.uid])
+                        self.tracer.end("request", id=c.uid, outcome="ok")
+                    busy |= rep.queue_len() > 0
+                    self.tracer.counter(f"replica{i}.queued_weight",
+                                        weight=rep.queued_weight())
+                self._expire_deadlines()
             if not any(self.healthy) and (self.backlog or self._inflight):
                 self._fail_remaining("no_replicas",
                                      "all replicas evicted")

@@ -29,6 +29,7 @@ from collections import defaultdict, deque
 from typing import Sequence
 
 from repro.core.scheduler import WS, HealthWS, QueueState
+from repro.obs import metrics as obs_metrics
 
 TP_ANCHOR = 16   # model-axis width the fleet's divisibility is built on
 
@@ -40,19 +41,31 @@ class HostState:
 
 
 class HeartbeatMonitor:
-    def __init__(self, timeout: float = 60.0):
+    def __init__(self, timeout: float = 60.0,
+                 metrics: obs_metrics.Registry | None = None):
         self.timeout = timeout
         self.hosts: dict[str, HostState] = {}
+        reg = metrics if metrics is not None else obs_metrics.REGISTRY
+        self._m_beats = reg.counter(
+            "heartbeat_beats_total", "liveness reports, by host= label")
+        self._m_alive = reg.gauge(
+            "heartbeat_hosts_alive", "hosts within the liveness timeout")
+        self._m_failed = reg.gauge(
+            "heartbeat_hosts_failed", "hosts past the liveness timeout")
 
     def beat(self, host: str, step: int = -1,
              now: float | None = None) -> None:
         now = time.monotonic() if now is None else now
         self.hosts[host] = HostState(last_seen=now, step=step)
+        self._m_beats.inc(host=host)
 
     def failed(self, now: float | None = None) -> list[str]:
         now = time.monotonic() if now is None else now
-        return [h for h, s in self.hosts.items()
-                if now - s.last_seen > self.timeout]
+        bad = [h for h, s in self.hosts.items()
+               if now - s.last_seen > self.timeout]
+        self._m_failed.set(len(bad))
+        self._m_alive.set(len(self.hosts) - len(bad))
+        return bad
 
     def alive(self, now: float | None = None) -> list[str]:
         bad = set(self.failed(now))

@@ -1,0 +1,184 @@
+"""Serving-policy regressions: policy-by-name, OD capacity, DRR failover.
+
+Uses a model-free ``FakeReplica`` implementing the engine's replica
+interface, so scheduling semantics are tested without jax in the loop:
+
+  * every documented policy name (``drr | od | ws | health_ws``) must
+    construct and drain (``make_policy`` used to reject ``health_ws``);
+  * ``od`` must honor ``Policy.forced_capacity``: at most one *newly
+    queued* request per replica per tick (the engine used to hand the
+    policy ``cap=n_slots`` views, degenerating OD to DRR over full slot
+    batches);
+  * DRR round-robin state must address *physical* replicas across an
+    eviction (the engine used to let ``DRR._next`` index a filtered
+    healthy-only list, silently shifting the rotation after a failover).
+"""
+
+import pytest
+
+from repro.obs.metrics import Registry
+from repro.obs.trace import Tracer
+from repro.serve.engine import Completion, Request, ServingEngine
+
+import numpy as np
+
+
+class FakeReplica:
+    """Slot semantics without a model: each request decodes one token/tick."""
+
+    def __init__(self, n_slots=4):
+        self.n_slots = n_slots
+        self.slots = {}                 # uid -> remaining ticks
+        self.admissions = []            # uids in admission order
+
+    def queue_len(self):
+        return len(self.slots)
+
+    def queued_weight(self):
+        return float(sum(self.slots.values()))
+
+    def capacity(self):
+        return self.n_slots
+
+    def active_uids(self):
+        return list(self.slots)
+
+    def release(self, uid):
+        self.slots.pop(uid, None)
+        return []
+
+    def admit(self, req):
+        if len(self.slots) >= self.n_slots:
+            raise RuntimeError("no free slot (scheduler race)")
+        self.slots[req.uid] = max(int(req.max_new_tokens), 1)
+        self.admissions.append(req.uid)
+
+    def tick(self):
+        done = []
+        for uid in list(self.slots):
+            self.slots[uid] -= 1
+            if self.slots[uid] <= 0:
+                del self.slots[uid]
+                done.append(Completion(uid, [0]))
+        return done
+
+
+def _req(uid, weight=4):
+    return Request(uid=uid, prompt=np.zeros(1, np.int32),
+                   max_new_tokens=weight)
+
+
+@pytest.mark.parametrize("policy", ["drr", "od", "ws", "health_ws"])
+def test_engine_accepts_every_documented_policy_name(policy):
+    reps = [FakeReplica(), FakeReplica()]
+    eng = ServingEngine(reps, policy=policy)
+    for i in range(6):
+        eng.submit(_req(i))
+    done = eng.run_until_drained(max_ticks=200)
+    assert sorted(c.uid for c in done) == list(range(6))
+    assert eng.failed == []
+
+
+def test_health_ws_speed_fn_hook_steers_admissions():
+    reps = [FakeReplica(8), FakeReplica(8)]
+    eng = ServingEngine(reps, policy="health_ws",
+                        speed_fn=lambda: {0: 0.0, 1: 1.0})
+    for i in range(4):
+        eng.submit(_req(i))
+    eng._admit_backlog()
+    assert reps[0].admissions == []          # speed 0 = do not schedule
+    assert reps[1].admissions == [0, 1, 2, 3]
+
+
+def test_od_admits_at_most_one_per_replica_per_tick():
+    reps = [FakeReplica(4), FakeReplica(4)]
+    eng = ServingEngine(reps, policy="od")
+    for i in range(8):
+        eng.submit(_req(i))
+    eng._admit_backlog()                     # one scheduling round = one tick
+    assert [len(r.admissions) for r in reps] == [1, 1]
+    done = eng.run_until_drained(max_ticks=200)
+    assert sorted(c.uid for c in done) == list(range(8))
+    # OD never outran its per-tick budget: admissions stay <= 1 per call
+    assert eng.failed == []
+
+
+def test_od_respects_free_slots():
+    rep = FakeReplica(n_slots=1)
+    eng = ServingEngine([rep], policy="od")
+    eng.submit(_req(0, weight=3))
+    eng.submit(_req(1, weight=3))
+    eng._admit_backlog()
+    assert rep.admissions == [0]             # slot full: uid 1 must wait
+    eng._admit_backlog()
+    assert rep.admissions == [0]             # still full, even a fresh round
+    done = eng.run_until_drained(max_ticks=100)
+    assert sorted(c.uid for c in done) == [0, 1]
+
+
+def test_drr_rotation_addresses_physical_replicas_after_eviction():
+    reps = [FakeReplica(8) for _ in range(3)]
+    eng = ServingEngine(reps, policy="drr")
+    eng.submit(_req(0))
+    eng.submit(_req(1))
+    eng._admit_backlog()                     # DRR: -> r0, r1; _next points at 2
+    assert (reps[0].admissions, reps[1].admissions) == ([0], [1])
+    eng._evict(0, "test")                    # requeues uid 0 into the backlog
+    eng.submit(_req(2))
+    eng._admit_backlog()
+    # The rotation pointer meant *physical* replica 2.  Before the fix the
+    # policy saw the filtered healthy list [r1, r2], so _next=2 wrapped to
+    # index 0 of that list and the requeued request landed back-to-back on
+    # r1 while r2 sat idle.
+    assert reps[2].admissions == [0]         # requeued uid 0 -> physical r2
+    assert reps[1].admissions == [1, 2]      # then rotation skips dead r0
+
+
+def test_drr_stays_fair_across_eviction():
+    reps = [FakeReplica(16) for _ in range(3)]
+    eng = ServingEngine(reps, policy="drr")
+    eng._evict(1, "test")
+    for i in range(8):
+        eng.submit(_req(i))
+    eng._admit_backlog()
+    assert reps[1].admissions == []
+    assert len(reps[0].admissions) == 4 and len(reps[2].admissions) == 4
+
+
+def test_engine_drain_produces_trace_and_metrics():
+    tr = Tracer()
+    reg = Registry()
+    reps = [FakeReplica(2), FakeReplica(2)]
+    eng = ServingEngine(reps, policy="ws", tracer=tr, metrics=reg)
+    for i in range(5):
+        eng.submit(_req(i, weight=3))
+    eng.run_until_drained(max_ticks=100)
+
+    names = {e["name"] for e in tr.events}
+    assert {"engine.tick", "request", "request.admit"} <= names
+    # every request's async span is closed exactly once
+    begins = [e for e in tr.events if e.get("ph") == "b"]
+    ends = [e for e in tr.events if e.get("ph") == "e"]
+    assert len(begins) == 5 and len(ends) == 5
+    snap = reg.snapshot()
+    assert snap["engine_requests_total"]["series"][0]["value"] == 5
+    assert snap["engine_completions_total"]["series"][0]["value"] == 5
+    wait = snap["engine_queue_wait_ticks"]["series"][0]
+    assert wait["count"] == 5
+    lat = snap["engine_request_ticks"]["series"][0]
+    assert lat["count"] == 5
+
+
+def test_eviction_records_event_and_metric():
+    tr = Tracer()
+    reg = Registry()
+    reps = [FakeReplica(2), FakeReplica(2)]
+    eng = ServingEngine(reps, policy="ws", tracer=tr, metrics=reg)
+    eng.submit(_req(0))
+    eng._admit_backlog()
+    victim = next(i for i, r in enumerate(reps) if r.admissions)
+    eng._evict(victim, "test kill")
+    assert any(e["name"] == "replica.evict" for e in tr.events)
+    assert reg.snapshot()["engine_evictions_total"]["series"][0]["value"] == 1
+    eng.run_until_drained(max_ticks=100)
+    assert sorted(c.uid for c in eng.completed) == [0]   # requeued + finished

@@ -1,0 +1,263 @@
+"""Observability layer: tracer, metrics registry, report, instrumented runs."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import make_tree_dataset
+
+from repro.core import farm_build, frontier
+from repro.core.config import GrowConfig
+from repro.core.farm import FaultPolicy
+from repro.core.faults import FaultInjector, FaultSpec
+from repro.core.tree import trees_equal
+from repro.obs import report
+from repro.obs.metrics import DEFAULT_BUCKETS, Registry
+from repro.obs.trace import NULL, Tracer, _NULL_SPAN
+
+
+# ---------------------------------------------------------------- tracer
+
+
+def test_span_nesting_emits_one_complete_event_per_span():
+    tr = Tracer()
+    with tr.span("outer", step=0):
+        with tr.span("inner"):
+            pass
+        with tr.span("inner"):
+            pass
+    evs = [e for e in tr.events if e.get("ph") == "X"]
+    assert [e["name"] for e in evs] == ["inner", "inner", "outer"]
+    outer = evs[-1]
+    assert outer["args"] == {"step": 0}
+    # children are contained within the parent's interval
+    for inner in evs[:2]:
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1.0
+
+
+def test_disabled_tracer_is_a_noop():
+    assert NULL.enabled is False
+    assert NULL.span("x") is _NULL_SPAN
+    with NULL.span("x", a=1):
+        NULL.instant("ev", k=2)
+        NULL.counter("c", v=3.0)
+        NULL.begin("req", id=1)
+        NULL.end("req", id=1)
+    assert NULL.events == []
+
+
+def test_chrome_export_is_perfetto_shaped(tmp_path):
+    tr = Tracer()
+    with tr.span("phase"):
+        tr.instant("blip", detail="x")
+    tr.counter("load", weight=3.0)
+    tr.begin("request", id=7, weight=12)
+    tr.end("request", id=7, outcome="ok")
+    path = tr.save(str(tmp_path / "trace.json"))
+    doc = json.loads(open(path).read())
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert {"X", "i", "C", "b", "e", "M"} <= phases
+    for e in evs:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] != "M":
+            assert "ts" in e
+    b = next(e for e in evs if e["ph"] == "b")
+    en = next(e for e in evs if e["ph"] == "e")
+    assert b["id"] == en["id"] == 7 and b["cat"] == en["cat"] == "async"
+
+
+def test_tracer_assigns_one_lane_per_thread():
+    tr = Tracer()
+
+    barrier = threading.Barrier(3)       # keep idents from being recycled
+
+    def work():
+        barrier.wait()
+        with tr.span("t"):
+            pass
+        barrier.wait()
+
+    threads = [threading.Thread(target=work) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    with tr.span("main"):
+        pass
+    tids = {e["tid"] for e in tr.events if e["ph"] == "X"}
+    assert len(tids) == 4
+    meta = [e for e in tr.events if e["ph"] == "M"]
+    assert {e["tid"] for e in meta} == {e["tid"] for e in tr.events
+                                        if e["ph"] == "X"}
+
+
+def test_span_summary_aggregates_by_name():
+    tr = Tracer()
+    for _ in range(3):
+        with tr.span("step"):
+            pass
+    s = tr.span_summary()["step"]
+    assert s["count"] == 3
+    assert s["total_us"] >= s["max_us"] >= 0
+    assert s["mean_us"] == pytest.approx(s["total_us"] / 3)
+
+
+# ---------------------------------------------------------------- metrics
+
+
+def test_counter_labels_are_independent_series():
+    reg = Registry()
+    c = reg.counter("farm_events_total", "events")
+    c.inc(event="retry")
+    c.inc(event="retry")
+    c.inc(event="quarantine")
+    assert c.value(event="retry") == 2
+    assert c.value(event="quarantine") == 1
+    assert c.value(event="nope") == 0
+    snap = reg.snapshot()["farm_events_total"]
+    assert snap["kind"] == "counter"
+    got = {tuple(s["labels"].items()): s["value"] for s in snap["series"]}
+    assert got == {(("event", "retry"),): 2.0,
+                   (("event", "quarantine"),): 1.0}
+
+
+def test_counter_rejects_negative_increment():
+    with pytest.raises(ValueError):
+        Registry().counter("c").inc(-1)
+
+
+def test_registry_is_idempotent_and_kind_checked():
+    reg = Registry()
+    a = reg.counter("m", "first")
+    b = reg.counter("m", "second help ignored")
+    assert a is b and a.help == "first"
+    with pytest.raises(TypeError):
+        reg.gauge("m")
+    with pytest.raises(TypeError):
+        reg.histogram("m")
+
+
+def test_gauge_set_and_inc():
+    g = Registry().gauge("load")
+    g.set(5.0, worker=0)
+    g.inc(2.5, worker=0)
+    g.set(1.0, worker=1)
+    assert g.value(worker=0) == 7.5
+    assert g.value(worker=1) == 1.0
+
+
+def test_histogram_buckets_and_quantiles():
+    reg = Registry()
+    h = reg.histogram("lat", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 0.7, 5.0, 50.0, 5000.0):
+        h.observe(v)
+    snap = reg.snapshot()["lat"]["series"][0]
+    assert snap["counts"] == [2, 1, 1, 1]        # last = +inf overflow
+    assert snap["count"] == 5
+    assert snap["sum"] == pytest.approx(5056.2)
+    assert h.quantile(0.5) == 10.0       # 3rd of 5 obs lands in (1, 10]
+    assert h.quantile(0.9) == float("inf")
+    assert np.isnan(h.quantile(0.5, other="series"))
+
+
+def test_default_buckets_sorted():
+    assert list(DEFAULT_BUCKETS) == sorted(DEFAULT_BUCKETS)
+
+
+def test_registry_reset():
+    reg = Registry()
+    reg.counter("x").inc()
+    reg.reset()
+    assert reg.snapshot() == {}
+    assert reg.get("x") is None
+
+
+# ----------------------------------------------------------------- report
+
+
+def test_report_renders_empty_and_full():
+    assert "no observability data" in report.render()
+    tr = Tracer()
+    reg = Registry()
+    with tr.span("superstep"):
+        pass
+    tr.counter("w0.queued_weight", weight=2.0)
+    reg.counter("farm_events_total", "e").inc(event="retry")
+    reg.histogram("engine_queue_wait_ticks", "w").observe(3.0)
+    txt = report.render(tracer=tr, metrics=reg,
+                        farm_stats={"n_workers": 2, "tasks": 5, "retries": 1,
+                                    "worker_busy_s": [0.5, 0.25],
+                                    "worker_tasks": [3, 2],
+                                    "emitter_busy_s": 0.1})
+    for needle in ("superstep", "w0.queued_weight", "farm_events_total",
+                   "engine_queue_wait_ticks", "p50"):
+        assert needle in txt
+
+
+# ------------------------------------------------- instrumented runtimes
+
+
+def test_traced_frontier_build_matches_untraced():
+    ds = make_tree_dataset(np.random.default_rng(11), n=240)
+    cfg = GrowConfig(max_depth=5)
+    plain = frontier.build(ds, cfg)
+    tr = Tracer()
+    reg = Registry()
+    traced, stats = frontier.build(ds, cfg, collect_stats=True,
+                                   tracer=tr, metrics=reg)
+    assert trees_equal(plain, traced)
+
+    names = {e["name"] for e in tr.events if e["ph"] == "X"}
+    assert {"superstep", "splitPre", "splitAtt", "splitPost"} <= names
+    summ = tr.span_summary()
+    n_steps = len(stats)
+    assert summ["superstep"]["count"] == n_steps
+    assert summ["splitAtt"]["count"] == n_steps
+    snap = reg.snapshot()
+    assert snap["frontier_supersteps_total"]["series"][0]["value"] == n_steps
+    phase = snap["frontier_phase_seconds"]["series"]
+    assert {tuple(s["labels"].items())[0][1] for s in phase} == \
+        {"splitPre", "splitAtt", "splitPost"}
+    assert all(s["count"] == n_steps for s in phase)
+
+
+def test_traced_farm_chaos_build_matches_oracle(tmp_path):
+    ds = make_tree_dataset(np.random.default_rng(5), n=220)
+    cfg = GrowConfig(max_depth=6)
+    oracle = farm_build.build(ds, cfg, n_workers=1)
+    tr = Tracer()
+    reg = Registry()
+    inj = FaultInjector(seed=3, spec=FaultSpec(crash_p=0.25))
+    stats = {}
+    tree = farm_build.build(ds, cfg, n_workers=4, injector=inj,
+                            fault=FaultPolicy(max_retries=8, backoff_base=0),
+                            stats_out=stats, tracer=tr, metrics=reg)
+    assert trees_equal(oracle, tree)
+    assert stats["retries"] > 0
+
+    names = {e["name"] for e in tr.events}
+    assert {"task", "emitter", "task.dispatch", "task.retry"} <= names
+    snap = reg.snapshot()
+    events = {s["labels"]["event"]: s["value"]
+              for s in snap["farm_events_total"]["series"]}
+    assert events.get("retries") == stats["retries"]
+    assert snap["farm_tasks_done_total"]["series"][0]["value"] == \
+        sum(stats["worker_tasks"])
+    # trace survives a JSON round-trip (Perfetto-loadable)
+    path = tr.save(str(tmp_path / "farm.json"))
+    assert json.loads(open(path).read())["traceEvents"]
+
+
+def test_tracing_disabled_leaves_no_residue():
+    ds = make_tree_dataset(np.random.default_rng(2), n=200)
+    cfg = GrowConfig(max_depth=4)
+    n0 = len(NULL.events)
+    a = frontier.build(ds, cfg)
+    b = frontier.build(ds, cfg, tracer=NULL)
+    assert trees_equal(a, b)
+    assert len(NULL.events) == n0
