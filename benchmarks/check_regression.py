@@ -18,6 +18,14 @@ Usage::
     python benchmarks/check_regression.py \
         --baseline BENCH_superstep.json --current bench_current.json \
         [--tolerance 0.15]
+
+``--baseline``/``--current`` may be repeated to gate several artifacts in
+one invocation (pairs are matched positionally); the gate fails if any
+pair fails::
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_superstep.json --current cur_superstep.json \
+        --baseline BENCH_infer.json     --current cur_infer.json
 """
 
 from __future__ import annotations
@@ -81,30 +89,37 @@ def compare(baseline: dict, current: dict,
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--baseline", required=True,
-                    help="committed BENCH_*.json to compare against")
-    ap.add_argument("--current", required=True,
-                    help="artifact the benchmark run just wrote (BENCH_OUT)")
+    ap.add_argument("--baseline", action="append", required=True,
+                    help="committed BENCH_*.json to compare against "
+                         "(repeatable; paired positionally with --current)")
+    ap.add_argument("--current", action="append", required=True,
+                    help="artifact the benchmark run just wrote (BENCH_OUT; "
+                         "repeatable)")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="allowed fractional slowdown (default 0.15 = +15%%)")
     args = ap.parse_args(argv)
+    if len(args.baseline) != len(args.current):
+        ap.error(f"{len(args.baseline)} --baseline vs "
+                 f"{len(args.current)} --current: pairs must match")
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.current) as f:
-        current = json.load(f)
-
-    errors, notes = compare(baseline, current, args.tolerance)
-    for n in notes:
-        print(n)
-    for e in errors:
-        print(e, file=sys.stderr)
-    if errors:
-        print(f"FAIL: {len(errors)} problem(s) vs {args.baseline}",
-              file=sys.stderr)
-        return 1
-    print(f"PASS: within +{args.tolerance:.0%} of {args.baseline}")
-    return 0
+    failed = 0
+    for base_path, cur_path in zip(args.baseline, args.current):
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        errors, notes = compare(baseline, current, args.tolerance)
+        for n in notes:
+            print(n)
+        for e in errors:
+            print(e, file=sys.stderr)
+        if errors:
+            print(f"FAIL: {len(errors)} problem(s) vs {base_path}",
+                  file=sys.stderr)
+            failed += 1
+        else:
+            print(f"PASS: within +{args.tolerance:.0%} of {base_path}")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,153 @@
+"""Batched forest inference: per-tree loop vs vmap vs pallas traversal.
+
+Times :func:`repro.infer.forest.predict_per_tree` under each implementation
+across a grid of forest widths and batch sizes on one trained tree
+(replicated to width ``T`` — prediction cost does not depend on tree
+diversity, only on node count and depth).  The point of the figure: the
+per-tree python loop (``ref``) pays one full descent dispatch per tree,
+while the batched paths amortize the whole forest into one launch — at
+serving batch sizes (>= 1024 rows) the batched path wins by orders of
+magnitude, which is what makes the microbatching front-end
+(:mod:`repro.infer.service`) worth its latency floor.
+
+Emits the usual CSV rows *and* writes a ``BENCH_infer.json`` artifact
+(path overridable via ``BENCH_OUT``) gated by
+``benchmarks/check_regression.py`` against the committed baseline.
+
+Knobs for CI smoke runs (all env vars):
+
+  * ``BENCH_SCALE``        — global dataset scale multiplier (common.py);
+  * ``BENCH_BATCH_SIZES``  — comma list of batch sizes (default
+    ``64,1024,4096``);
+  * ``BENCH_FOREST_WIDTHS``— comma list of forest widths (default
+    ``1,8,32``);
+  * ``BENCH_VARIANTS``     — comma list of impls to time; ``ref`` always
+    runs (it is the per-tree baseline the speedup row divides by).
+
+Off-TPU the pallas kernel runs in interpret mode, so absolute
+pallas-vs-vmap times are meaningless there (the JSON records the backend);
+the ref-vs-vmap ratio is meaningful everywhere — both are jax on the same
+backend, only the launch structure differs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):      # `python benchmarks/fig_infer.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks import common
+from repro.core import c45
+from repro.core.config import GrowConfig
+from repro.data import datasets
+from repro.infer.forest import Forest, IMPLS, predict_per_tree
+from repro.obs.metrics import Registry
+
+DATASET = "syd10m9a"          # QUEST stand-in: 9 attrs, deep tree (Table 1)
+MAX_BINS = 32
+BATCH_SIZES = tuple(int(v) for v in os.environ.get(
+    "BENCH_BATCH_SIZES", "64,1024,4096").split(","))
+FOREST_WIDTHS = tuple(int(v) for v in os.environ.get(
+    "BENCH_FOREST_WIDTHS", "1,8,32").split(","))
+
+
+def _variants() -> tuple[str, ...]:
+    want = os.environ.get("BENCH_VARIANTS")
+    if not want:
+        return IMPLS
+    keep = {v.strip() for v in want.split(",")} | {"ref"}   # ref = baseline
+    unknown = keep - set(IMPLS)
+    if unknown:
+        raise SystemExit(f"BENCH_VARIANTS: unknown {sorted(unknown)} "
+                         f"(have {sorted(IMPLS)})")
+    return tuple(v for v in IMPLS if v in keep)
+
+
+def run() -> list[dict]:
+    ds = datasets.load(DATASET, scale=common.SCALES[DATASET], seed=0,
+                       max_bins=MAX_BINS)
+    tree = c45.build(ds, GrowConfig(max_nodes=1 << 14))
+    variants = _variants()
+
+    registry = Registry()
+    m_call = registry.histogram(
+        "bench_infer_seconds", "timed predict call; variant/width/batch")
+
+    steps: list[dict] = []
+    for n_trees in FOREST_WIDTHS:
+        forest = Forest.pack([tree] * n_trees)
+        for batch in BATCH_SIZES:
+            x = np.resize(np.asarray(ds.x), (batch, ds.n_attrs))
+            # Grid-point step ids (not positional): a smoke run over a
+            # subset of the grid still aligns with the committed baseline.
+            row = {"step": f"t{n_trees}_b{batch}",
+                   "n_trees": n_trees, "batch": batch}
+            for impl in variants:
+                _, secs = common.timed(
+                    predict_per_tree, forest, x, ds.attr_is_cont,
+                    impl=impl, repeats=3)
+                row[f"t_{impl}_s"] = secs
+                m_call.observe(secs, variant=impl, n_trees=n_trees,
+                               batch=batch)
+            steps.append(row)
+
+    artifact = {
+        "dataset": DATASET,
+        "scale": common.SCALES[DATASET],
+        "n_cases": ds.n_cases,
+        "n_attrs": ds.n_attrs,
+        "max_bins": MAX_BINS,
+        "backend": jax.default_backend(),
+        "tree_nodes": tree.size,
+        "tree_depth": tree.depth,
+        "batch_sizes": list(BATCH_SIZES),
+        "forest_widths": list(FOREST_WIDTHS),
+        "steps": steps,
+        "metrics": registry.snapshot(),
+    }
+    out_path = os.environ.get("BENCH_OUT", "BENCH_infer.json")
+    with open(out_path, "w") as f:
+        json.dump(artifact, f, indent=1)
+
+    def mean(rows, key):
+        return float(np.mean([r[key] for r in rows])) if rows else float("nan")
+
+    rows = []
+    for impl in variants:
+        rows.append({
+            "name": f"infer/{impl}",
+            "us_per_call": f"{mean(steps, f't_{impl}_s') * 1e6:.1f}",
+            "n_points": len(steps),
+            "dataset": DATASET,
+            "tree_nodes": tree.size,
+        })
+    # The acceptance ratio: batched vs the per-tree loop at serving sizes.
+    serving = [s for s in steps if s["batch"] >= 1024]
+    if serving and "vmap" in variants:
+        ref_s = mean(serving, "t_ref_s")
+        vmap_s = mean(serving, "t_vmap_s")
+        row = {
+            "name": "infer/batched_speedup",
+            "us_per_call": "",
+            "n_serving_points": len(serving),
+            "t_ref_us": f"{ref_s * 1e6:.1f}",
+            "t_vmap_us": f"{vmap_s * 1e6:.1f}",
+            "speedup_vmap": f"{ref_s / vmap_s:.2f}",
+            "artifact": out_path,
+        }
+        if "pallas" in variants:
+            row["t_pallas_us"] = f"{mean(serving, 't_pallas_s') * 1e6:.1f}"
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    common.emit(run())

@@ -19,6 +19,7 @@ MODULES = (
     "fig12_cost_models",
     "fig13_scheduling",
     "fig_superstep",
+    "fig_infer",
     "fig_faults",
     "table2_quadcore",
 )

@@ -88,52 +88,99 @@ class Tree:
         return "\n".join(lines)
 
 
-def _descend_once(tree: Tree, attr_is_cont: jnp.ndarray, node: jnp.ndarray,
-                  x_row_bins: jnp.ndarray) -> jnp.ndarray:
-    """One routing step for a batch of cases sitting at ``node``."""
-    attr = tree.node_attr[node]
-    nchild = tree.node_nchild[node]
+def descend_once(attr_is_cont: jnp.ndarray, node: jnp.ndarray,
+                 x_row_bins: jnp.ndarray, *, node_attr: jnp.ndarray,
+                 node_split_bin: jnp.ndarray, node_child0: jnp.ndarray,
+                 node_nchild: jnp.ndarray, heavy: jnp.ndarray) -> jnp.ndarray:
+    """One routing step for a batch of cases sitting at ``node``.
+
+    Shared by :func:`predict` and the packed-forest batched predictor
+    (:mod:`repro.infer.forest`), which vmaps it over stacked node arrays —
+    hence the keyword array arguments instead of a :class:`Tree`.
+    ``heavy`` is the precomputed :func:`heavy_child_table`.
+    """
+    attr = node_attr[node]
+    nchild = node_nchild[node]
     is_leaf = nchild == 0
     b = jnp.take_along_axis(x_row_bins, jnp.maximum(attr, 0)[:, None],
                             axis=1)[:, 0]
     cont = attr_is_cont[jnp.maximum(attr, 0)]
-    child_cont = jnp.where(b <= tree.node_split_bin[node], 0, 1)
+    child_cont = jnp.where(b <= node_split_bin[node], 0, 1)
     child = jnp.where(cont, child_cont, b).astype(jnp.int32)
-    # Unknown value: C4.5 prediction follows the heaviest child; we route to
-    # the child holding the largest weight — precomputed as node_class-side
-    # fallback: follow child 0..nchild-1 with max freq.  We approximate with
-    # the majority-weight child recorded during growth via node_class of the
-    # children; for simplicity route unknowns to the heaviest child by weight.
-    heaviest = _heaviest_child(tree, node, nchild)
-    child = jnp.where(b < 0, heaviest, child)
+    # Unknown value: C4.5 prediction follows the heaviest child (the child
+    # holding the largest total case weight), matching splitPost routing.
+    child = jnp.where(b < 0, heavy[node], child)
     child = jnp.clip(child, 0, jnp.maximum(nchild - 1, 0))
-    nxt = tree.node_child0[node] + child
+    nxt = node_child0[node] + child
     return jnp.where(is_leaf, node, nxt)
 
 
-def _heaviest_child(tree: Tree, node: jnp.ndarray, nchild: jnp.ndarray
-                    ) -> jnp.ndarray:
-    """Index (0-based among siblings) of the child with the largest weight."""
-    c0 = tree.node_child0[node]
-    max_h = 8  # scan a bounded window; trees with wider splits fall back to 0
-    ws = []
-    for j in range(max_h):
-        cid = c0 + j
-        valid = j < nchild
-        ws.append(jnp.where(valid, jnp.sum(tree.node_freq[cid], axis=-1),
-                            -jnp.inf))
-    return jnp.argmax(jnp.stack(ws, axis=-1), axis=-1).astype(jnp.int32)
+def heavy_child_table(node_child0: jnp.ndarray, node_nchild: jnp.ndarray,
+                      node_freq: jnp.ndarray) -> jnp.ndarray:
+    """Per-node sibling rank of the heaviest child, exact for any arity.
+
+    Returns ``heavy (M,) int32`` with ``heavy[i]`` = 0-based index among
+    node i's children of the child with the largest total weight (first one
+    on ties, matching ``np.argmax``); 0 for leaves.  All static-shape
+    vectorized ops, so it is jit-safe and replaces the old bounded
+    ``max_h = 8`` window that silently mis-routed unknown values on nodes
+    with more than 8 children.
+
+    Relies on the BFS layout shared by every engine: children are contiguous
+    and ``node_child0`` is non-decreasing over emitting nodes, so sibling
+    blocks tile the id space and a cumulative max over block-start marks
+    recovers each node's parent.
+    """
+    m = node_child0.shape[0]
+    ids = jnp.arange(m, dtype=jnp.int32)
+    internal = node_nchild > 0
+    # parent[j] for every non-root node j (roots/padding resolve to -1)
+    marks = jnp.full((m,), -1, jnp.int32).at[
+        jnp.where(internal, node_child0, 0)].max(
+        jnp.where(internal, ids, -1))
+    parent = jax.lax.cummax(marks)
+    p_idx = jnp.where(parent >= 0, parent, 0)
+    rank = ids - node_child0[p_idx]
+    # Padding past the live prefix inherits the last block's parent from the
+    # cummax: the rank-range check rules those positions out.
+    is_child = (parent >= 0) & (rank >= 0) & (rank < node_nchild[p_idx])
+    w = jnp.sum(node_freq, axis=-1)
+    # heaviest weight among each parent's children, scattered back per child
+    max_w = jnp.full((m,), -jnp.inf, node_freq.dtype).at[p_idx].max(
+        jnp.where(is_child, w, -jnp.inf))
+    is_best = is_child & (w >= max_w[p_idx])
+    big = jnp.int32(1 << 30)
+    heavy = jnp.full((m,), big, jnp.int32).at[p_idx].min(
+        jnp.where(is_best, rank, big))
+    return jnp.where(internal & (heavy < big), heavy, 0).astype(jnp.int32)
 
 
 def predict(tree: Tree, x_bins: jnp.ndarray, attr_is_cont: jnp.ndarray,
-            max_depth: int = 64) -> jnp.ndarray:
-    """Vectorized class prediction for binned cases ``x_bins (N, A)``."""
+            max_depth: int | None = None) -> jnp.ndarray:
+    """Vectorized class prediction for binned cases ``x_bins (N, A)``.
+
+    ``max_depth`` (the descent's trip count) defaults to
+    ``node_depth.max() + 1`` over the live prefix, so deep trees classify at
+    their true leaves instead of silently truncating at a fixed budget.
+    Deriving it reads concrete host values; jit-static callers (a traced
+    ``tree``) must pass an explicit ``max_depth``.
+    """
+    if max_depth is None:
+        n = int(tree.n_nodes)
+        max_depth = (int(np.max(np.asarray(tree.node_depth)[:n])) + 1
+                     if n else 1)
     x_bins = jnp.asarray(x_bins, jnp.int32)
     attr_is_cont = jnp.asarray(attr_is_cont, bool)
     node = jnp.zeros((x_bins.shape[0],), jnp.int32)
+    heavy = heavy_child_table(tree.node_child0, tree.node_nchild,
+                              tree.node_freq)
 
     def body(_, node):
-        return _descend_once(tree, attr_is_cont, node, x_bins)
+        return descend_once(attr_is_cont, node, x_bins,
+                            node_attr=tree.node_attr,
+                            node_split_bin=tree.node_split_bin,
+                            node_child0=tree.node_child0,
+                            node_nchild=tree.node_nchild, heavy=heavy)
 
     node = jax.lax.fori_loop(0, max_depth, body, node)
     return tree.node_class[node]

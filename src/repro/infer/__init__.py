@@ -1,0 +1,18 @@
+"""Batched tree-inference serving subsystem.
+
+Three layers (README "Inference serving"):
+
+  * :mod:`repro.infer.forest`   — pack :class:`~repro.core.tree.Tree`\\ s
+    into a padded structure-of-arrays :class:`Forest`; batched prediction
+    via vmap or the Pallas traversal kernel; ensemble vote aggregation.
+  * :mod:`repro.infer.registry` — versioned on-disk model registry with
+    atomic publish, checksum verification and a hot-swap
+    :class:`ModelHandle` (canary / shadow routing).
+  * :mod:`repro.infer.service`  — microbatching predict front-end over a
+    fleet of replicas, scheduled by the paper's farm policies.
+"""
+
+from repro.infer.forest import Forest, predict, predict_per_tree  # noqa: F401
+from repro.infer.registry import ModelHandle                      # noqa: F401
+from repro.infer.service import (                                 # noqa: F401
+    BatchPredictService, InferReplica, PredictRequest)

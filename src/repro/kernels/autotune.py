@@ -91,6 +91,37 @@ def plan_blocks(
     return BlockPlan(block_t=bt, block_k=bk, block_b=bb, block_a=ba)
 
 
+@dataclasses.dataclass(frozen=True)
+class InferBlockPlan:
+    """Static tile size for the forest-traversal kernel's case axis."""
+    block_n: int
+
+
+def plan_infer_blocks(
+    *,
+    n_cases: int,
+    capacity: int,          # M: padded node count per packed tree
+    n_attrs: int,
+    node_cols: int = 8,
+    vmem_budget: int = VMEM_BUDGET,
+    block_n: int | None = None,
+) -> InferBlockPlan:
+    """Case-tile size for :mod:`repro.kernels.tree_infer` (override wins).
+
+    The dominant VMEM tenant is the per-step one-hot expansion
+    ``E (block_n, M) f32``; the node table ``(M, node_cols)`` and the case
+    tile ``(block_n, A)`` ride along.  Solve 4*block_n*(M + A) +
+    4*M*node_cols <= budget for the largest power-of-two block_n in
+    [8, 1024], shrunk to the padded case count for small problems.
+    """
+    if block_n is not None:
+        return InferBlockPlan(block_n=block_n)
+    resident = max(1, vmem_budget - 4 * capacity * node_cols)
+    bn = resident // (4 * (capacity + max(1, n_attrs)))
+    bn = max(8, min(_pow2_floor(bn), 1024, _pow2_ceil(max(8, n_cases))))
+    return InferBlockPlan(block_n=bn)
+
+
 def plan_for_config(cfg, *, n_cases: int, n_bins: int, n_classes: int,
                     n_attrs: int) -> BlockPlan:
     """Plan from a :class:`GrowConfig` (its ``block_*`` fields pin tiles)."""

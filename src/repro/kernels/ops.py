@@ -12,6 +12,8 @@ import jax.numpy as jnp
 
 from repro.kernels import histogram as _histogram
 from repro.kernels import split_gain as _split_gain
+from repro.kernels import tree_infer as _tree_infer
+from repro.kernels.autotune import plan_infer_blocks
 
 
 def _on_cpu() -> bool:
@@ -52,6 +54,21 @@ def frontier_histogram_compact(x, y, w, slot, *, n_slots: int, n_bins: int,
         x, y, w, slot, n_slots=n_slots, n_bins=n_bins, n_classes=n_classes,
         min_bucket=min_bucket, block_t=block_t, block_k=block_k,
         block_b=block_b, interpret=interpret)
+
+
+def forest_predict(node_tab, x_bins, attr_is_cont, *, max_depth: int,
+                   block_n: int | None = None,
+                   interpret: bool | None = None):
+    """(T, N) leaf classes — level-synchronous MXU traversal kernel."""
+    if interpret is None:
+        interpret = _on_cpu()
+    t_dim, m_dim, cols = node_tab.shape
+    plan = plan_infer_blocks(
+        n_cases=x_bins.shape[0], capacity=m_dim,
+        n_attrs=x_bins.shape[1], node_cols=cols, block_n=block_n)
+    return _tree_infer.forest_predict(
+        node_tab, x_bins, attr_is_cont, max_depth=max_depth,
+        block_n=plan.block_n, interpret=interpret)
 
 
 def split_gain(hist, total_w, attr_is_cont, n_bins, *, min_objs: float = 2.0,

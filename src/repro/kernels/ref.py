@@ -17,6 +17,14 @@ def frontier_histogram_ref(x, y, w, slot, *, n_slots: int, n_bins: int,
         n_slots=n_slots, n_bins=n_bins, n_classes=n_classes)
 
 
+def forest_predict_ref(forest, x_bins, attr_is_cont, *,
+                       max_depth: int | None = None) -> jnp.ndarray:
+    """(T, N) leaf classes via the per-tree oracle ``tree.predict`` loop."""
+    from repro.infer.forest import predict_per_tree
+    return predict_per_tree(forest, x_bins, attr_is_cont, impl="ref",
+                            max_depth=max_depth)
+
+
 def split_gain_ref(hist, total_w, attr_is_cont, n_bins, *,
                    min_objs: float = 2.0, criterion: str = "gain"):
     """(score, split_bin) of shape (K, A) via the shared scorer."""

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: batched forest traversal (level-synchronous descent).
+
+Inference over a packed :class:`~repro.infer.forest.Forest` is the serving
+hot-spot: route N cases through T trees of capacity M.  A GPU port would
+chase pointers with per-thread gathers; the TPU-native formulation keeps one
+tree's node table plus one case block resident in VMEM and turns every
+per-depth gather into a one-hot MXU matmul (the same trick as
+:mod:`repro.kernels.histogram`):
+
+    for each depth step:
+        E    = onehot(node over M)                    (Nblk, M)
+        vals = E @ node_tab                           (Nblk, NODE_COLS)
+        # vals columns: attr, split_bin, child0, nchild, heavy, class
+        Ea   = onehot(attr over A)                    (Nblk, A)
+        b    = rowsum(Ea * x_block)                   (Nblk,)  case's bin
+        node = route(b, vals)        # continuous / discrete / unknown
+
+The grid is (tree, case block): each kernel instance loads its tree's
+``(M, NODE_COLS)`` table once and streams ``max_depth`` descent steps over a
+``(block_n, A)`` case tile, emitting the ``(block_n,)`` leaf classes.  All
+table values are small integers, exact in f32 (capacities < 2**24), so the
+matmul gathers are bit-faithful to :func:`repro.core.tree.descend_once`.
+
+Routing semantics match the shared descend step exactly: continuous
+attributes test ``b <= split_bin`` (child 0/1), discrete attributes index
+the child by bin value, unknown values (``b < 0``) follow the precomputed
+heaviest child, and leaves (``nchild == 0``) are absorbing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Column layout of the packed node table (see :meth:`Forest.node_table`).
+COL_ATTR, COL_SPLIT, COL_CHILD0, COL_NCHILD, COL_HEAVY, COL_CLASS = range(6)
+NODE_COLS = 8          # 6 live columns padded to 8 for sublane alignment
+
+
+def _infer_kernel(tab_ref, x_ref, cont_ref, out_ref, *, max_depth: int,
+                  capacity: int):
+    tab = tab_ref[0].astype(jnp.float32)           # (M, NODE_COLS)
+    x = x_ref[...].astype(jnp.float32)             # (Nblk, A) bins, -1 unknown
+    cont = cont_ref[0, :].astype(jnp.float32)      # (A,)
+    n_blk, a_dim = x.shape
+
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
+    iota_a = jax.lax.broadcasted_iota(jnp.float32, (1, a_dim), 1)
+
+    def gather_cols(node):
+        e = (node[:, None] == iota_m).astype(jnp.float32)   # (Nblk, M)
+        return jax.lax.dot_general(
+            e, tab, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (Nblk, NODE_COLS)
+
+    def step(_, node):
+        vals = gather_cols(node)
+        attr = vals[:, COL_ATTR]
+        sbin = vals[:, COL_SPLIT]
+        child0 = vals[:, COL_CHILD0]
+        nchild = vals[:, COL_NCHILD]
+        heavy = vals[:, COL_HEAVY]
+        ea = (attr[:, None] == iota_a).astype(jnp.float32)  # (Nblk, A)
+        b = jnp.sum(ea * x, axis=1)
+        is_cont = jnp.sum(ea * cont[None, :], axis=1) > 0.5
+        child = jnp.where(is_cont, jnp.where(b <= sbin, 0.0, 1.0), b)
+        child = jnp.where(b < 0, heavy, child)
+        child = jnp.clip(child, 0.0, jnp.maximum(nchild - 1.0, 0.0))
+        nxt = (child0 + child).astype(jnp.int32)
+        return jnp.where(nchild == 0, node, nxt)
+
+    node = jnp.zeros((n_blk,), jnp.int32)
+    node = jax.lax.fori_loop(0, max_depth, step, node)
+    out_ref[...] = gather_cols(node)[None, :, COL_CLASS].astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_depth", "block_n", "interpret"))
+def forest_predict(
+    node_tab: jnp.ndarray,       # int32 (T, M, NODE_COLS) packed node table
+    x_bins: jnp.ndarray,         # int32 (N, A) bins; -1 = unknown
+    attr_is_cont: jnp.ndarray,   # bool (A,)
+    *,
+    max_depth: int,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (T, N) int32 leaf classes, one row per packed tree."""
+    t_dim, m_dim, cols = node_tab.shape
+    if cols != NODE_COLS:
+        raise ValueError(f"node_tab last dim {cols} != {NODE_COLS}")
+    n, a_dim = x_bins.shape
+    pad_n = (-n) % block_n
+    if pad_n:
+        x_bins = jnp.pad(x_bins, ((0, pad_n), (0, 0)),
+                         constant_values=-1)
+    np_dim = n + pad_n
+
+    grid = (t_dim, np_dim // block_n)
+    out = pl.pallas_call(
+        functools.partial(_infer_kernel, max_depth=max_depth,
+                          capacity=m_dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m_dim, NODE_COLS), lambda t, nb: (t, 0, 0)),
+            pl.BlockSpec((block_n, a_dim), lambda t, nb: (nb, 0)),
+            pl.BlockSpec((1, a_dim), lambda t, nb: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda t, nb: (t, nb)),
+        out_shape=jax.ShapeDtypeStruct((t_dim, np_dim), jnp.int32),
+        interpret=interpret,
+    )(node_tab.astype(jnp.int32), x_bins.astype(jnp.int32),
+      attr_is_cont.astype(jnp.int32)[None, :])
+    return out[:, :n]

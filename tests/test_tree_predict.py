@@ -1,0 +1,160 @@
+"""Prediction-side semantics of the shared Tree: unknown-value routing on
+wide splits (the old bounded 8-child window) and true-leaf descent depth
+(the old fixed max_depth=64 truncation)."""
+
+import numpy as np
+import pytest
+
+from repro.core import binning, c45
+from repro.core.config import GrowConfig
+from repro.core.tree import Tree, heavy_child_table, predict
+
+
+def _chain_tree(depth: int, n_classes: int = 2) -> Tree:
+    """Degenerate right-leaning chain: internal at every level, the deepest
+    leaf classifies 1, every other node classifies 0."""
+    import jax.numpy as jnp
+    n = 2 * depth + 1
+    t = Tree.empty(n, n_classes)
+    attr = np.full(n, -1, np.int32)
+    sbin = np.full(n, -1, np.int32)
+    child0 = np.zeros(n, np.int32)
+    nchild = np.zeros(n, np.int32)
+    cls = np.zeros(n, np.int32)
+    freq = np.zeros((n, n_classes), np.float32)
+    dep = np.zeros(n, np.int32)
+    node = 0
+    for d in range(depth):
+        attr[node] = 0
+        sbin[node] = 0                     # bin 0 -> left leaf, bin 1 -> on
+        child0[node] = node + 1
+        nchild[node] = 2
+        dep[node + 1] = dep[node + 2] = d + 1
+        freq[node + 1] = [1.0, 0.0]
+        freq[node + 2] = [0.0, 2.0]        # right child is heavier
+        node = node + 2
+    cls[node] = 1                          # the deepest leaf
+    freq[0] = [1.0, 2.0]
+    return Tree(
+        node_attr=jnp.asarray(attr), node_split_bin=jnp.asarray(sbin),
+        node_child0=jnp.asarray(child0), node_nchild=jnp.asarray(nchild),
+        node_class=jnp.asarray(cls), node_freq=jnp.asarray(freq),
+        node_depth=jnp.asarray(dep), n_nodes=jnp.int32(n))
+
+
+def _wide_dataset(heavy_value: int, n_values: int = 12, per_value: int = 4,
+                  heavy_extra: int = 30):
+    """One discrete attribute with ``n_values`` categories; category
+    ``heavy_value`` dominates by case count and has its own class."""
+    xs, ys = [], []
+    for v in range(n_values):
+        reps = per_value + (heavy_extra if v == heavy_value else 0)
+        xs += [v] * reps
+        ys += [v % 2 if v != heavy_value else 1] * reps
+    x = np.array(xs)
+    y = np.array(ys)
+    return binning.fit([x], y, attr_is_cont=[False], n_classes=2)
+
+
+class TestHeavyChildTable:
+    def test_matches_numpy_argmax_any_arity(self, rng):
+        """Oracle check on random wide trees (well beyond the old window)."""
+        for trial in range(5):
+            m = 64
+            nchild = np.zeros(m, np.int32)
+            child0 = np.zeros(m, np.int32)
+            # random BFS-shaped forest of sibling blocks over [1, m)
+            nxt, emit = 1, 0
+            while nxt < m - 1 and emit < m:
+                width = int(rng.integers(2, 14))
+                width = min(width, m - nxt)
+                if width < 2:
+                    break
+                nchild[emit] = width
+                child0[emit] = nxt
+                nxt += width
+                emit += 1
+            freq = rng.random((m, 3)).astype(np.float32)
+            got = np.asarray(heavy_child_table(child0, nchild, freq))
+            w = freq.sum(-1)
+            for i in range(m):
+                if nchild[i] == 0:
+                    assert got[i] == 0
+                else:
+                    sib = w[child0[i]: child0[i] + nchild[i]]
+                    assert got[i] == int(np.argmax(sib)), (trial, i)
+
+    def test_wide_split_unknown_routes_to_heavy_child(self):
+        """An unknown value on a 12-way split must follow the heaviest
+        child even when its sibling rank is past the old max_h=8 window."""
+        for heavy in (1, 10, 11):
+            ds = _wide_dataset(heavy)
+            tree = c45.build(ds, GrowConfig(min_objs=1.0))
+            t = tree.to_numpy()
+            assert int(t.node_nchild[0]) == 12
+            heavy_rank = int(np.asarray(heavy_child_table(
+                tree.node_child0, tree.node_nchild, tree.node_freq))[0])
+            assert heavy_rank == heavy
+            unknown = np.array([[-1]], np.int32)
+            pred = int(np.asarray(predict(tree, unknown,
+                                          ds.attr_is_cont))[0])
+            heavy_leaf = int(t.node_child0[0]) + heavy
+            assert pred == int(t.node_class[heavy_leaf]) == 1
+
+    def test_oracle_agreement_with_unknowns(self, rng):
+        """predict on unknown-valued cases == the C4.5 heaviest-child oracle
+        (sequential build routes training unknowns the same way)."""
+        from conftest import make_tree_dataset
+        ds = make_tree_dataset(rng, n=500, unknown_frac=0.2)
+        tree = c45.build(ds, GrowConfig())
+        t = tree.to_numpy()
+
+        def oracle_one(row):
+            node = 0
+            while t.node_nchild[node]:
+                a = int(t.node_attr[node])
+                b = int(row[a])
+                if b < 0:
+                    w = t.node_freq.sum(-1)
+                    sib = w[t.node_child0[node]:
+                            t.node_child0[node] + t.node_nchild[node]]
+                    child = int(np.argmax(sib))
+                elif ds.attr_is_cont[a]:
+                    child = 0 if b <= int(t.node_split_bin[node]) else 1
+                else:
+                    child = min(b, int(t.node_nchild[node]) - 1)
+                node = int(t.node_child0[node]) + child
+            return int(t.node_class[node])
+
+        pred = np.asarray(predict(tree, ds.x, ds.attr_is_cont))
+        want = np.array([oracle_one(r) for r in ds.x])
+        np.testing.assert_array_equal(pred, want)
+
+
+class TestPredictDepth:
+    def test_deep_tree_classifies_at_true_leaf(self):
+        """Default descent must reach leaves deeper than the old fixed 64."""
+        depth = 100
+        tree = _chain_tree(depth)
+        assert tree.depth == depth
+        x = np.array([[1]], np.int32)      # bin 1: always go right
+        pred = int(np.asarray(predict(tree, x, np.array([True])))[0])
+        assert pred == 1                   # the depth-100 leaf's class
+        # explicit truncation stays available for jit-static callers
+        trunc = int(np.asarray(predict(tree, x, np.array([True]),
+                                       max_depth=10))[0])
+        assert trunc == 0                  # parked at an internal node
+
+    def test_default_depth_matches_explicit(self, rng):
+        from conftest import make_tree_dataset
+        ds = make_tree_dataset(rng, n=300)
+        tree = c45.build(ds, GrowConfig())
+        a = np.asarray(predict(tree, ds.x, ds.attr_is_cont))
+        b = np.asarray(predict(tree, ds.x, ds.attr_is_cont,
+                               max_depth=tree.depth + 1))
+        np.testing.assert_array_equal(a, b)
+
+    def test_empty_tree_depth_default(self):
+        tree = Tree.empty(4, 2)
+        pred = predict(tree, np.zeros((3, 1), np.int32), np.array([True]))
+        np.testing.assert_array_equal(np.asarray(pred), np.zeros(3))
