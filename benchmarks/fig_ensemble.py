@@ -1,0 +1,149 @@
+"""Ensemble training throughput: trees/sec vs farm workers, OOB trajectory.
+
+Trains the same random forest (fixed ``(dataset, ForestConfig)``, hence the
+same trees bit-for-bit every run) over the supervised farm at several worker
+counts and times each run.  Tree tasks are embarrassingly parallel, so this
+is the ensemble's outer-level answer to the paper's inner-level
+(nodes/attributes) speedup figures — with the same caveat the paper makes
+for its pthread baseline: the c45 oracle engine is Python, so thread-farm
+speedup is bounded by how much of the build releases the GIL (numpy
+kernels).  The figure records the honest trees/sec trajectory; the
+process-level (or ``impl="frontier"`` jit) path is where large speedups
+live.
+
+Second panel: the OOB trajectory — the out-of-bag error re-scored on the
+first ``k`` trees for growing ``k``, showing the usual fast-then-flat
+convergence that justifies the forest width.
+
+Emits the usual CSV rows *and* a ``BENCH_ensemble.json`` artifact (path
+overridable via ``BENCH_OUT``) gated by ``benchmarks/check_regression.py``
+against the committed baseline.
+
+Knobs for CI smoke runs (all env vars):
+
+  * ``BENCH_SCALE``            — global dataset scale multiplier (common.py);
+  * ``BENCH_ENSEMBLE_TREES``   — forest width (default 6);
+  * ``BENCH_ENSEMBLE_WORKERS`` — comma list of worker counts (default
+    ``1,2,4``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+
+if __package__ in (None, ""):      # `python benchmarks/fig_ensemble.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks import common
+from repro.core.config import GrowConfig
+from repro.data import datasets
+from repro.ensemble import ForestConfig, oob_score, train_forest
+from repro.obs.metrics import Registry
+
+DATASET = "syd10m9a"          # QUEST stand-in: 9 attrs, deep trees (Table 1)
+MAX_BINS = 32
+N_TREES = int(os.environ.get("BENCH_ENSEMBLE_TREES", "6"))
+WORKERS = tuple(int(v) for v in os.environ.get(
+    "BENCH_ENSEMBLE_WORKERS", "1,2,4").split(","))
+GROW = GrowConfig(max_nodes=1 << 14)
+#: Ensemble runs N_TREES full builds per worker count — use a quarter of the
+#: common dataset scale so the whole figure stays within a CPU budget (the
+#: scaling *shape* is what matters; mtry trees are deeper than single-tree
+#: builds at equal N).
+SCALE = 0.25 * common.SCALES[DATASET]
+
+
+def run() -> list[dict]:
+    ds = datasets.load(DATASET, scale=SCALE, seed=0, max_bins=MAX_BINS)
+    fc = ForestConfig(n_trees=N_TREES, seed=0, grow=GROW)
+    registry = Registry()
+
+    # -- panel 1: trees/sec vs workers (same forest every time) -------------
+    steps: list[dict] = []
+    result = None
+    for n_workers in WORKERS:
+        stats: dict = {}
+        result, secs = common.timed(
+            lambda nw=n_workers, st=stats: train_forest(
+                ds, fc, n_workers=nw, stats_out=st, metrics=registry),
+            repeats=1)
+        # One shared timing key across both panels: check_regression sums
+        # each t_*_s key over every common step, so heterogeneous step
+        # types must agree on the key set.
+        steps.append({
+            "step": f"w{n_workers}",
+            "n_workers": n_workers,
+            "t_step_s": secs,
+            "trees_per_s": stats["trees_per_s"],
+            "n_trees": result.n_trees,
+        })
+
+    # -- panel 2: OOB trajectory over the first k trees ---------------------
+    oob_steps: list[dict] = []
+    ks = sorted({max(1, N_TREES // 4), max(1, N_TREES // 2), N_TREES})
+    for k in ks:
+        fck = ForestConfig(n_trees=k, seed=0, grow=GROW)
+        r, secs = common.timed(
+            lambda trees=result.trees[:k], cfg=fck: oob_score(
+                trees, ds, cfg, metrics=registry),
+            repeats=1)
+        oob_steps.append({
+            "step": f"oob_k{k}",
+            "k": k,
+            "t_step_s": secs,
+            "oob_score": r.score,
+            "oob_coverage": r.coverage,
+        })
+
+    artifact = {
+        "dataset": DATASET,
+        "scale": SCALE,
+        "n_cases": ds.n_cases,
+        "n_attrs": ds.n_attrs,
+        "max_bins": MAX_BINS,
+        "backend": jax.default_backend(),
+        "n_trees": N_TREES,
+        "mtry": fc.resolved_mtry(ds.n_attrs),
+        "workers": list(WORKERS),
+        "steps": steps + oob_steps,
+        "metrics": registry.snapshot(),
+    }
+    out_path = os.environ.get("BENCH_OUT", "BENCH_ensemble.json")
+    with open(out_path, "w") as f:
+        json.dump(artifact, f, indent=1)
+
+    rows = []
+    for s in steps:
+        rows.append({
+            "name": f"ensemble/train_w{s['n_workers']}",
+            "us_per_call": f"{s['t_step_s'] * 1e6:.1f}",
+            "trees_per_s": f"{s['trees_per_s']:.3f}",
+            "n_trees": s["n_trees"],
+            "dataset": DATASET,
+        })
+    if len(steps) >= 2:
+        rows.append({
+            "name": "ensemble/scaling",
+            "us_per_call": "",
+            "speedup": f"{steps[0]['t_step_s'] / steps[-1]['t_step_s']:.2f}",
+            "workers": f"{steps[0]['n_workers']}->{steps[-1]['n_workers']}",
+            "artifact": out_path,
+        })
+    for s in oob_steps:
+        rows.append({
+            "name": f"ensemble/{s['step']}",
+            "us_per_call": f"{s['t_step_s'] * 1e6:.1f}",
+            "oob_score": f"{s['oob_score']:.4f}",
+            "coverage": f"{s['oob_coverage']:.3f}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    common.emit(run())

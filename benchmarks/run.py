@@ -20,6 +20,7 @@ MODULES = (
     "fig13_scheduling",
     "fig_superstep",
     "fig_infer",
+    "fig_ensemble",
     "fig_faults",
     "table2_quadcore",
 )

@@ -68,20 +68,30 @@ class BinnedDataset:
 
 
 def _bin_continuous(col: np.ndarray, max_bins: int) -> tuple[np.ndarray, np.ndarray]:
+    if max_bins < 1:
+        raise ValueError(f"max_bins must be >= 1, got {max_bins}")
     known = ~np.isnan(col)
     binned = np.full(col.shape, UNKNOWN, dtype=np.int32)
     if not known.any():
+        # All-unknown column: no domain, no edges — every case keeps bin -1
+        # and the attribute can never split (its histogram is empty).
         return binned, np.zeros((0,), dtype=np.float64)
     vals = col[known].astype(np.float64)
     domain = np.unique(vals)
     if domain.size <= max_bins:
         # Exact rank space: bin == index of the value in the sorted domain.
+        # A constant column degenerates to a single bin [value].
         binned[known] = np.searchsorted(domain, vals).astype(np.int32)
         return binned, domain
     # Quantile binning: edges are *actual domain values* so that the split
     # threshold is still "a value of A in the whole training set".
     qs = np.linspace(0.0, 1.0, max_bins + 1)[1:-1]
     cut = np.unique(np.quantile(domain, qs, method="nearest"))
+    # Skewed quantiles may collapse onto the domain maximum; keep only cuts
+    # strictly below it so the final edge (== domain max) is unique and no
+    # trailing bin is structurally empty.  max_bins=1 (qs empty) and a fully
+    # collapsed cut both degenerate to one bin covering the whole domain.
+    cut = cut[cut < domain[-1]]
     # side="left": a value equal to cut[i] lands in bin i, whose upper edge is
     # cut[i] — so the split "x <= edge[b]" includes its own edge value.
     binned[known] = np.searchsorted(cut, vals, side="left").astype(np.int32)

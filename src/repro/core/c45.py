@@ -245,22 +245,33 @@ def split_node(ds: BinnedDataset, cfg: GrowConfig, *, idx: np.ndarray,
 
 def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(),
           *, task_trace: list | None = None,
-          capacity: int | None = None) -> Tree:
+          capacity: int | None = None,
+          attr_mask: np.ndarray | None = None,
+          case_w: np.ndarray | None = None) -> Tree:
     """Breadth-first C4.5 growth (paper Fig. 4, tree::build).
 
     ``task_trace``, when given, records one entry per processed node:
     ``(node_id, parent_id, r, c, n_children)`` — the exact task DAG the farm
     simulator replays (weights = r, as in the paper's WS policy).
+
+    ``attr_mask`` (bool (A,)) restricts the split search to a subset of
+    attributes and ``case_w`` (f32 (N,)) overrides the per-case weights —
+    the ensemble trainer's per-tree feature-subset / bootstrap hooks
+    (:mod:`repro.ensemble.sampling`).  Both default to the full dataset, so
+    every engine keeps sharing one :class:`BinnedDataset` instead of
+    materialising per-tree copies.
     """
     nodes = _Nodes.new()
     n = ds.n_cases
     root_idx = np.arange(n, dtype=np.int64)
-    root_w = ds.w.astype(np.float32).copy()
+    w_base = ds.w if case_w is None else np.asarray(case_w)
+    root_w = w_base.astype(np.float32).copy()
+    root_active = (np.ones(ds.n_attrs, dtype=bool) if attr_mask is None
+                   else np.asarray(attr_mask, dtype=bool).copy())
     root_freq = class_frequencies(ds, root_idx, root_w)
     root = nodes.add(cls=int(np.argmax(root_freq)), freq=root_freq, depth=0)
     q: deque[_Task] = deque()
-    q.append(_Task(root, root_idx, root_w,
-                   np.ones(ds.n_attrs, dtype=bool), 0))
+    q.append(_Task(root, root_idx, root_w, root_active, 0))
     parent_of = {root: -1}
 
     while q:

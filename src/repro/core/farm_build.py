@@ -64,7 +64,8 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
           fault: FaultPolicy | None = None, injector: Any = None,
           capacity: int | None = None, strict: bool = True,
           stats_out: dict | None = None, tracer: Any = None,
-          metrics: Any = None) -> Tree:
+          metrics: Any = None, attr_mask: np.ndarray | None = None,
+          case_w: np.ndarray | None = None) -> Tree:
     """Grow a C4.5 tree through the supervised farm; oracle-equal result.
 
     ``injector``  — optional :class:`repro.core.faults.FaultInjector`; its
@@ -75,6 +76,8 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
                     :class:`repro.obs.metrics.Registry`; the farm records
                     task spans, retry/quarantine/death events and
                     queued-weight timelines into them.
+    ``attr_mask`` / ``case_w`` — same per-tree feature-subset / bootstrap
+                    weight hooks as :func:`repro.core.c45.build`.
     """
     nodes = c45._Nodes.new()
     order: deque[int] = deque()        # emission (= BFS) order, apply cursor
@@ -114,14 +117,17 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
         if task is None:                       # start-up: emit the root
             n = ds.n_cases
             root_idx = np.arange(n, dtype=np.int64)
-            root_w = ds.w.astype(np.float32).copy()
+            w_base = ds.w if case_w is None else np.asarray(case_w)
+            root_w = w_base.astype(np.float32).copy()
+            root_active = (np.ones(ds.n_attrs, dtype=bool)
+                           if attr_mask is None
+                           else np.asarray(attr_mask, dtype=bool).copy())
             root_freq = c45.class_frequencies(ds, root_idx, root_w)
             root = nodes.add(cls=int(np.argmax(root_freq)), freq=root_freq,
                              depth=0)
             depth_of[root] = 0
             order.append(root)
-            send(make_task(root, root_idx, root_w,
-                           np.ones(ds.n_attrs, dtype=bool)),
+            send(make_task(root, root_idx, root_w, root_active),
                  weight=float(n))
             return
         if isinstance(task, TaskFailure):      # quarantined: degrade to leaf

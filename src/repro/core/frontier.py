@@ -83,8 +83,8 @@ class FrontierProblem:
             max_children=h, cfg=cfg)
 
 
-def init_state(prob: FrontierProblem, y: jnp.ndarray, w: jnp.ndarray
-               ) -> GrowState:
+def init_state(prob: FrontierProblem, y: jnp.ndarray, w: jnp.ndarray,
+               attr_mask: jnp.ndarray | None = None) -> GrowState:
     cfg = prob.cfg
     tree = Tree.empty(cfg.max_nodes, prob.n_classes)
     root_freq = jax.ops.segment_sum(w.astype(jnp.float32), y,
@@ -92,11 +92,14 @@ def init_state(prob: FrontierProblem, y: jnp.ndarray, w: jnp.ndarray
     tree.node_freq = tree.node_freq.at[0].set(root_freq)
     tree.node_class = tree.node_class.at[0].set(
         jnp.argmax(root_freq).astype(jnp.int32))
+    active = jnp.ones((cfg.max_nodes, prob.n_attrs), bool)
+    if attr_mask is not None:
+        active = active & jnp.asarray(attr_mask, bool)[None, :]
     return GrowState(
         tree=tree,
         status=jnp.zeros((cfg.max_nodes,), jnp.int32).at[0].set(
             GrowState.STATUS_OPEN),
-        active=jnp.ones((cfg.max_nodes, prob.n_attrs), bool),
+        active=active,
         case_node=jnp.zeros((prob.n_cases,), jnp.int32),
         n_nodes=jnp.int32(1),
         overflow=jnp.bool_(False),
@@ -407,9 +410,9 @@ def _superstep_fn(prob: FrontierProblem, impl: str):
 
 
 @functools.partial(jax.jit, static_argnames=("prob", "impl"))
-def _build_jit(x, y, w, attr_is_cont, n_bins, *, prob: FrontierProblem,
-               impl: str) -> GrowState:
-    state = init_state(prob, y, w)
+def _build_jit(x, y, w, attr_mask, attr_is_cont, n_bins, *,
+               prob: FrontierProblem, impl: str) -> GrowState:
+    state = init_state(prob, y, w, attr_mask)
     step = _superstep_fn(prob, impl)
 
     def cond(state):
@@ -425,6 +428,7 @@ def _build_jit(x, y, w, attr_is_cont, n_bins, *, prob: FrontierProblem,
 def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
           impl: str = "jnp", collect_stats: bool = False,
           tracer: Any = None, metrics: Any = None,
+          attr_mask: Any = None, case_w: Any = None,
           ) -> Tree | tuple[Tree, list[dict[str, Any]]]:
     """Grow a C4.5 tree with the SPMD frontier engine.
 
@@ -440,6 +444,12 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
     splitPost wall time per superstep.  With tracing disabled nothing
     changes: the fused single-jit superstep (or the whole-build
     ``while_loop``) runs exactly as before.
+
+    ``attr_mask`` (bool (A,)) restricts the split search to a subset of
+    attributes; ``case_w`` (f32 (N,)) overrides the per-case weights — the
+    ensemble trainer's per-tree hooks (:mod:`repro.ensemble`).  Both are
+    traced arguments, so forests of masked/bootstrapped trees reuse one
+    compiled build.
     """
     if cfg.unknown_fractional:
         raise ValueError("frontier engine routes unknowns to the heaviest "
@@ -447,13 +457,15 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
     prob = FrontierProblem.from_dataset(ds, cfg)
     x = jnp.asarray(ds.x)
     y = jnp.asarray(ds.y)
-    w = jnp.asarray(ds.w, jnp.float32)
+    w = jnp.asarray(ds.w if case_w is None else case_w, jnp.float32)
+    mask = (jnp.ones((ds.n_attrs,), bool) if attr_mask is None
+            else jnp.asarray(attr_mask, bool))
     cont = jnp.asarray(ds.attr_is_cont)
     nb = jnp.asarray(ds.n_bins, jnp.int32)
     traced = tracer is not None and tracer.enabled
 
     if not collect_stats and not traced:
-        state = _build_jit(x, y, w, cont, nb, prob=prob, impl=impl)
+        state = _build_jit(x, y, w, mask, cont, nb, prob=prob, impl=impl)
         return dataclasses.replace(state.tree, n_nodes=state.n_nodes)
 
     from repro.obs import metrics as obs_metrics
@@ -491,7 +503,7 @@ def build(ds: BinnedDataset, cfg: GrowConfig = GrowConfig(), *,
         def step_fn(state, step_i):
             return fused(state, x, y, w, cont, nb)
 
-    state = init_state(prob, y, w)
+    state = init_state(prob, y, w, mask)
     out: list[dict[str, Any]] = []
     step_i = 0
     while bool(jnp.any(state.status == GrowState.STATUS_OPEN)):

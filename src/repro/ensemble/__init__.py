@@ -1,0 +1,23 @@
+"""Ensemble training subsystem: farm-parallel random forests.
+
+Four layers (README "Ensemble training"):
+
+  * :mod:`repro.ensemble.sampling` — per-tree bootstrap weights and feature
+    subsets as pure functions of ``(seed, tree_id)``, so any worker can
+    regenerate any tree's inputs after a crash;
+  * :mod:`repro.ensemble.trainer`  — tree-level dispatch over the supervised
+    farm (one task per tree; retry / quarantine / worker-death semantics
+    inherited) or the jitted frontier superstep, both bit-identical to the
+    sequential per-tree oracle;
+  * :mod:`repro.ensemble.oob`      — out-of-bag error and permutation
+    variable importance from the bootstrap complements;
+  * :mod:`repro.ensemble.publish`  — pack the forest and atomically publish
+    it into the serving registry (:mod:`repro.infer`).
+"""
+
+from repro.ensemble.oob import (                                  # noqa: F401
+    OOBResult, oob_score, permutation_importance)
+from repro.ensemble.publish import publish_forest                 # noqa: F401
+from repro.ensemble.trainer import (                              # noqa: F401
+    ForestConfig, QuarantinedTrees, TrainResult, train_forest,
+    train_forest_sequential, train_tree)

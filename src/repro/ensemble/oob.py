@@ -1,0 +1,131 @@
+"""Out-of-bag evaluation: generalisation error and variable importance.
+
+Each bootstrap leaves ~36.8% of cases out of its tree's sample; those cases
+are an honest test set *for that tree*.  Aggregating, every case is scored
+by the sub-ensemble of trees that never saw it — the OOB estimate of
+generalisation error, free with training (Breiman 1996).  Because the
+bootstrap complements are pure functions of ``(seed, tree_id)``
+(:mod:`.sampling`), OOB needs no state from the training run: any process
+holding the trees and the config can recompute it.
+
+Predictions go through the packed-forest batched path
+(:func:`repro.infer.forest.predict_per_tree`) — one ``(T, N)`` tensor, the
+OOB mask applied to the vote tally — so OOB costs one batched inference
+sweep, not T × N tree walks.
+
+Permutation variable importance: re-score OOB accuracy with attribute
+``a``'s column deterministically permuted; the accuracy drop is ``a``'s
+importance.  Permutations are keyed by ``(seed, attr, repeat)``, so the
+report is replayable too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.binning import BinnedDataset
+from repro.core.tree import Tree
+from repro.ensemble import sampling
+from repro.ensemble.trainer import ForestConfig
+from repro.infer.forest import Forest, predict_per_tree
+from repro.obs import metrics as obs_metrics
+
+
+def oob_matrix(fc: ForestConfig, n_cases: int,
+               tree_ids: list[int] | None = None) -> np.ndarray:
+    """(T, N) bool: ``[t, i]`` = case i is out-of-bag for tree t."""
+    ids = tree_ids if tree_ids is not None else list(range(fc.n_trees))
+    return np.stack([
+        sampling.bootstrap_counts(fc.seed, t, n_cases) == 0 for t in ids])
+
+
+def _vote(per_tree: np.ndarray, oob: np.ndarray, n_classes: int
+          ) -> np.ndarray:
+    """(N,) OOB-masked majority vote; -1 where no tree holds the case out."""
+    t_dim, n = per_tree.shape
+    onehot = np.zeros((t_dim, n, n_classes), np.float32)
+    np.put_along_axis(onehot, per_tree[:, :, None].astype(np.int64), 1.0,
+                      axis=2)
+    tally = np.einsum("tnc,tn->nc", onehot, oob.astype(np.float32))
+    pred = np.argmax(tally, axis=-1).astype(np.int32)
+    return np.where(oob.any(axis=0), pred, -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class OOBResult:
+    score: float            # accuracy over covered cases
+    coverage: float         # fraction of cases with >= 1 OOB tree
+    n_covered: int
+    pred: np.ndarray        # (N,) int32 OOB prediction, -1 = uncovered
+
+
+def oob_score(trees: list[Tree], ds: BinnedDataset, fc: ForestConfig, *,
+              tree_ids: list[int] | None = None, impl: str = "vmap",
+              metrics: obs_metrics.Registry | None = None) -> OOBResult:
+    """OOB generalisation estimate of a trained forest.
+
+    ``tree_ids`` names the ``(seed, tree_id)`` keys behind ``trees`` when
+    they are not simply ``0..T-1`` (e.g. a non-strict chaos run that dropped
+    a quarantined member).  Requires ``fc.bootstrap``; without resampling
+    there is no out-of-bag complement.
+    """
+    if not fc.bootstrap:
+        raise ValueError("OOB is undefined without bootstrap resampling")
+    if not trees:
+        raise ValueError("OOB needs at least one tree")
+    forest = Forest.pack(trees)
+    per_tree = np.asarray(
+        predict_per_tree(forest, ds.x, ds.attr_is_cont, impl=impl))
+    oob = oob_matrix(fc, ds.n_cases, tree_ids)
+    if oob.shape[0] != len(trees):
+        raise ValueError(f"{len(trees)} trees vs {oob.shape[0]} tree_ids")
+    pred = _vote(per_tree, oob, ds.n_classes)
+    covered = pred >= 0
+    n_cov = int(covered.sum())
+    score = float((pred[covered] == ds.y[covered]).mean()) if n_cov \
+        else float("nan")
+    reg = metrics if metrics is not None else obs_metrics.REGISTRY
+    reg.gauge("ensemble_oob_score",
+              "OOB accuracy of the last scored forest").set(score)
+    reg.gauge("ensemble_oob_coverage",
+              "fraction of cases with >= 1 OOB tree").set(
+        n_cov / max(ds.n_cases, 1))
+    return OOBResult(score=score, coverage=n_cov / max(ds.n_cases, 1),
+                     n_covered=n_cov, pred=pred)
+
+
+def permutation_importance(trees: list[Tree], ds: BinnedDataset,
+                           fc: ForestConfig, *,
+                           tree_ids: list[int] | None = None,
+                           impl: str = "vmap", n_repeats: int = 1
+                           ) -> np.ndarray:
+    """(A,) mean OOB-accuracy drop when attribute ``a``'s column is permuted.
+
+    Deterministic: permutation ``(a, r)`` is a pure function of
+    ``(fc.seed, a, r)``.  Attributes the forest never splits on score ~0.
+    """
+    if n_repeats < 1:
+        raise ValueError("n_repeats must be >= 1")
+    base = oob_score(trees, ds, fc, tree_ids=tree_ids, impl=impl,
+                     metrics=obs_metrics.Registry())
+    forest = Forest.pack(trees)
+    oob = oob_matrix(fc, ds.n_cases, tree_ids)
+    x = np.asarray(ds.x)
+    imp = np.zeros((ds.n_attrs,), np.float64)
+    for a in range(ds.n_attrs):
+        drops = []
+        for r in range(n_repeats):
+            xp = x.copy()
+            perm = sampling.permutation(fc.seed, a, r, ds.n_cases)
+            xp[:, a] = xp[perm, a]
+            per_tree = np.asarray(
+                predict_per_tree(forest, xp, ds.attr_is_cont, impl=impl))
+            pred = _vote(per_tree, oob, ds.n_classes)
+            covered = pred >= 0
+            acc = float((pred[covered] == ds.y[covered]).mean()) \
+                if covered.any() else float("nan")
+            drops.append(base.score - acc)
+        imp[a] = float(np.mean(drops))
+    return imp

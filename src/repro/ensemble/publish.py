@@ -1,0 +1,68 @@
+"""Bridge trained forests into the serving stack (pack -> atomic publish).
+
+The training loop's last mile: pack the ordered trees with
+:func:`repro.infer.forest.Forest.pack` and publish them atomically through
+:func:`repro.infer.registry.publish`, stamping the manifest with everything
+needed to reproduce or audit the model (seed, mtry, bootstrap, grow
+criterion, OOB score).  From there the standard serving flow applies
+unchanged — ``ModelHandle`` pins the version, ``set_canary`` routes a uid
+fraction onto a candidate, ``promote_canary`` / ``rollback`` move the fleet
+(see ``examples/train_forest.py`` for the full
+train -> publish -> canary -> promote loop).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.binning import BinnedDataset
+from repro.ensemble import oob as oob_mod
+from repro.ensemble.trainer import ForestConfig, TrainResult
+from repro.infer import registry
+
+
+def forest_metadata(fc: ForestConfig, *, n_attrs: int,
+                    oob: oob_mod.OOBResult | None = None,
+                    extra: dict | None = None) -> dict[str, Any]:
+    """The manifest metadata block for a published forest."""
+    meta: dict[str, Any] = {
+        "kind": "random_forest",
+        "seed": fc.seed,
+        "n_trees": fc.n_trees,
+        "mtry": fc.resolved_mtry(n_attrs),
+        "bootstrap": fc.bootstrap,
+        "criterion": fc.grow.criterion,
+        "min_objs": fc.grow.min_objs,
+        "max_depth": fc.grow.max_depth,
+    }
+    if oob is not None:
+        meta["oob_score"] = oob.score
+        meta["oob_coverage"] = oob.coverage
+    if extra:
+        meta.update(extra)
+    return meta
+
+
+def publish_forest(root: str, name: str, result: TrainResult,
+                   ds: BinnedDataset, *, score_oob: bool = True,
+                   weights=None, metadata: dict | None = None,
+                   keep_last: int | None = None) -> str:
+    """Pack + atomically publish a training run; returns the version path.
+
+    ``score_oob=True`` (default, bootstrap runs only) computes the OOB
+    estimate and records it in the manifest — the number a canary /
+    promotion decision reads back via ``registry.manifest_of``.
+    ``keep_last`` forwards to the registry's retention GC.
+    """
+    from repro.infer.forest import Forest
+    oob = None
+    if score_oob and result.config.bootstrap:
+        oob = oob_mod.oob_score(result.trees, ds, result.config,
+                                tree_ids=result.tree_ids)
+    meta = forest_metadata(result.config, n_attrs=ds.n_attrs, oob=oob,
+                           extra=metadata)
+    meta["tree_ids"] = result.tree_ids
+    meta["quarantined"] = result.quarantined
+    forest = Forest.pack(result.trees, weights=weights)
+    return registry.publish(root, name, forest, metadata=meta,
+                            keep_last=keep_last)

@@ -28,6 +28,7 @@ import dataclasses
 import itertools
 import json
 import os
+import shutil
 import zipfile
 import zlib
 from typing import Any
@@ -103,6 +104,9 @@ def verify(path: str) -> bool:
         return False
 
 
+_RETIRED_PREFIX = "retired."
+
+
 def list_versions(root: str, name: str) -> list[str]:
     """Published version directories, oldest first (validity not checked)."""
     d = os.path.join(root, name)
@@ -110,6 +114,26 @@ def list_versions(root: str, name: str) -> list[str]:
         return []
     return [os.path.join(d, v) for v in sorted(os.listdir(d))
             if v.startswith("v") and v[1:].isdigit()]
+
+
+def list_retired(root: str, name: str) -> list[str]:
+    """Rolled-back version directories, oldest first."""
+    d = os.path.join(root, name)
+    if not os.path.isdir(d):
+        return []
+    return [os.path.join(d, v) for v in sorted(os.listdir(d))
+            if v.startswith(_RETIRED_PREFIX)
+            and v[len(_RETIRED_PREFIX) + 1:].isdigit()]
+
+
+def _next_version(root: str, name: str) -> int:
+    """Next version number, never reusing one a retired dir ever held —
+    a re-publish after :func:`rollback` must not collide with the path a
+    serving handle may still have pinned."""
+    nums = [int(os.path.basename(p)[1:]) for p in list_versions(root, name)]
+    nums += [int(os.path.basename(p)[len(_RETIRED_PREFIX) + 1:])
+             for p in list_retired(root, name)]
+    return 1 + (max(nums) if nums else 0)
 
 
 def latest_valid(root: str, name: str, *,
@@ -129,26 +153,67 @@ def latest_valid(root: str, name: str, *,
 
 def publish(root: str, name: str, model: Forest | Tree, *,
             metadata: dict | None = None,
-            weights=None) -> str:
+            weights=None, keep_last: int | None = None) -> str:
     """Atomically publish the next version of ``name``; returns its path.
 
     Accepts a single :class:`Tree` (packed as a 1-tree forest) or a
     :class:`Forest`.  The version directory appears with one ``os.replace``
     — readers never observe a partially-written model.
+
+    ``keep_last=N`` runs retention GC after the publish: only the N newest
+    version directories (and the N newest retired ones) survive, so version
+    dirs no longer accumulate forever.  Pick N larger than the rollback /
+    canary depth you need — a pinned :class:`ModelHandle` whose version is
+    GC'd keeps serving from memory but cannot re-load it.
     """
     if isinstance(model, Tree):
         model = Forest.pack([model], weights=weights)
     d = os.path.join(root, name)
     os.makedirs(d, exist_ok=True)
-    existing = list_versions(root, name)
-    version = 1 + (int(os.path.basename(existing[-1])[1:])
-                   if existing else 0)
+    version = _next_version(root, name)
     final = os.path.join(d, _version_dir(version))
     tmp = os.path.join(d, f"tmp.{version}.{os.getpid()}.{next(_PUB_SEQ)}")
     os.makedirs(tmp)
     save_forest(tmp, model, version=version, metadata=metadata)
     os.replace(tmp, final)
+    if keep_last is not None:
+        gc_versions(root, name, keep_last=keep_last)
     return final
+
+
+def gc_versions(root: str, name: str, *, keep_last: int) -> list[str]:
+    """Delete all but the ``keep_last`` newest published (and retired)
+    version directories; returns the removed paths, oldest first."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    removed = []
+    for paths in (list_versions(root, name), list_retired(root, name)):
+        for p in paths[:-keep_last] if keep_last < len(paths) else []:
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(p)
+    return removed
+
+
+def rollback(root: str, name: str) -> str | None:
+    """Retire the newest version so :func:`latest_valid` re-points below it.
+
+    The newest version directory is renamed to ``retired.v*`` (one atomic
+    ``os.replace`` — readers never observe a half-retired version), which
+    removes it from :func:`list_versions` / :func:`latest_valid` without
+    destroying the bits.  Returns the new ``latest_valid`` path, or ``None``
+    when no published version remains.  A later :func:`publish` never reuses
+    the retired number.  Raises :class:`FileNotFoundError` when there is no
+    version to retire.
+    """
+    versions = list_versions(root, name)
+    if not versions:
+        raise FileNotFoundError(
+            f"no published version of {name!r} under {root!r} to roll back")
+    newest = versions[-1]
+    d = os.path.dirname(newest)
+    os.replace(newest,
+               os.path.join(d, _RETIRED_PREFIX + os.path.basename(newest)))
+    return latest_valid(root, name)
 
 
 def manifest_of(path: str) -> dict:

@@ -1,0 +1,88 @@
+"""Direct unit tests for the rank-space binner's degenerate cases.
+
+``_bin_continuous`` feeds every engine; these pin the corner behaviours the
+property tests only hit by accident: constant columns, all-unknown columns,
+``max_bins=1``, and skewed distributions whose quantile cuts collapse onto
+duplicate edges.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import binning
+from repro.core.binning import UNKNOWN, _bin_continuous
+
+
+class TestBinContinuousDegenerate:
+    def test_constant_column_single_exact_bin(self):
+        col = np.full(50, 3.25)
+        b, edges = _bin_continuous(col, max_bins=8)
+        assert (b == 0).all()
+        np.testing.assert_array_equal(edges, [3.25])
+
+    def test_all_unknown_column(self):
+        col = np.full(20, np.nan)
+        b, edges = _bin_continuous(col, max_bins=8)
+        assert (b == UNKNOWN).all()
+        assert edges.shape == (0,)
+
+    def test_all_unknown_column_survives_fit(self):
+        """An all-unknown attribute must fit cleanly and never split."""
+        rng = np.random.default_rng(0)
+        n = 80
+        cols = [rng.uniform(-1, 1, n), np.full(n, np.nan)]
+        y = (cols[0] > 0).astype(np.int64)
+        ds = binning.fit(cols, y, attr_is_cont=[True, True], n_classes=2,
+                         max_bins=16)
+        assert ds.n_bins[1] == 1          # fit clamps to >=1 for histograms
+        assert ds.bin_edges[1].size == 0  # ...but there is no real edge
+        assert (np.asarray(ds.x)[:, 1] == UNKNOWN).all()
+        from repro.core import c45
+        from repro.core.config import GrowConfig
+        tree = c45.build(ds, GrowConfig())
+        used = np.asarray(tree.node_attr)[:tree.size]
+        assert 1 not in set(used[used >= 0].tolist())
+
+    def test_max_bins_one_degenerates_to_single_bin(self):
+        col = np.linspace(-5.0, 5.0, 100)
+        b, edges = _bin_continuous(col, max_bins=1)
+        assert (b == 0).all()
+        np.testing.assert_array_equal(edges, [5.0])
+
+    def test_max_bins_below_one_rejected(self):
+        with pytest.raises(ValueError, match="max_bins"):
+            _bin_continuous(np.ones(3), max_bins=0)
+        with pytest.raises(ValueError, match="max_bins"):
+            _bin_continuous(np.ones(3), max_bins=-2)
+
+    def test_skewed_quantiles_do_not_duplicate_edges(self):
+        # 97% of the mass on the domain max: most quantile cuts collapse onto
+        # it; edges must stay strictly increasing with no empty trailing bin.
+        col = np.concatenate([np.arange(30, dtype=float),
+                              np.full(1000, 29.0)])
+        b, edges = _bin_continuous(col, max_bins=8)
+        assert np.unique(edges).size == edges.size
+        assert (np.diff(edges) > 0).all()
+        assert b.max() == edges.size - 1
+        # every bin actually holds at least one case
+        assert np.bincount(b, minlength=edges.size).min() > 0
+
+    def test_edges_are_domain_values(self):
+        rng = np.random.default_rng(1)
+        col = rng.lognormal(size=500)
+        _, edges = _bin_continuous(col, max_bins=16)
+        assert np.isin(edges, np.unique(col)).all()
+
+    def test_split_threshold_includes_its_edge(self):
+        # side="left" contract: a value equal to edge[i] lands in bin i, so
+        # the split "x <= threshold_value(a, i)" keeps its own edge value.
+        col = np.repeat(np.arange(100, dtype=float), 5)
+        b, edges = _bin_continuous(col, max_bins=10)
+        for i, e in enumerate(edges):
+            assert b[np.flatnonzero(col == e)[0]] == i
+
+    def test_unknowns_mixed_with_known_values(self):
+        col = np.array([1.0, np.nan, 2.0, np.nan, 1.0])
+        b, edges = _bin_continuous(col, max_bins=4)
+        np.testing.assert_array_equal(b, [0, UNKNOWN, 1, UNKNOWN, 0])
+        np.testing.assert_array_equal(edges, [1.0, 2.0])

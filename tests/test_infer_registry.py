@@ -143,3 +143,81 @@ class TestCanaryRouting:
         handle = registry.ModelHandle(str(tmp_path), "m")
         with pytest.raises(ValueError, match="verification"):
             handle.set_canary(v2, 0.5)
+
+
+class TestRollback:
+    def test_rollback_repoints_latest_valid(self, tmp_path, fo):
+        v1 = registry.publish(str(tmp_path), "m", fo)
+        v2 = registry.publish(str(tmp_path), "m", fo)
+        assert registry.latest_valid(str(tmp_path), "m") == v2
+        assert registry.rollback(str(tmp_path), "m") == v1
+        assert registry.latest_valid(str(tmp_path), "m") == v1
+        # the retired dir keeps the bits but is invisible to readers
+        assert registry.list_versions(str(tmp_path), "m") == [v1]
+        retired = registry.list_retired(str(tmp_path), "m")
+        assert [os.path.basename(p) for p in retired] == ["retired.v00000002"]
+        loaded, manifest = registry.load(retired[0])
+        assert manifest["version"] == 2
+
+    def test_rollback_never_reuses_version_numbers(self, tmp_path, fo):
+        registry.publish(str(tmp_path), "m", fo)
+        registry.publish(str(tmp_path), "m", fo)
+        registry.rollback(str(tmp_path), "m")
+        v3 = registry.publish(str(tmp_path), "m", fo)
+        assert v3.endswith("v00000003")     # v2 is retired, not recycled
+        assert registry.latest_valid(str(tmp_path), "m") == v3
+
+    def test_rollback_to_empty_returns_none(self, tmp_path, fo):
+        registry.publish(str(tmp_path), "m", fo)
+        assert registry.rollback(str(tmp_path), "m") is None
+        assert registry.latest_valid(str(tmp_path), "m") is None
+
+    def test_rollback_without_versions_raises(self, tmp_path, fo):
+        with pytest.raises(FileNotFoundError):
+            registry.rollback(str(tmp_path), "ghost")
+        registry.publish(str(tmp_path), "m", fo)
+        registry.rollback(str(tmp_path), "m")
+        with pytest.raises(FileNotFoundError):
+            registry.rollback(str(tmp_path), "m")
+
+    def test_handle_survives_rollback_of_pinned_version(self, tmp_path, fo):
+        registry.publish(str(tmp_path), "m", fo)
+        v2 = registry.publish(str(tmp_path), "m", fo)
+        handle = registry.ModelHandle(str(tmp_path), "m")
+        assert handle.stable_path == v2
+        registry.rollback(str(tmp_path), "m")
+        assert handle.stable is not None    # keeps serving from memory
+        assert handle.refresh()             # ...and refresh repoints below
+        assert handle.stable_path.endswith("v00000001")
+
+
+class TestRetention:
+    def test_keep_last_on_publish(self, tmp_path, fo):
+        for _ in range(5):
+            registry.publish(str(tmp_path), "m", fo, keep_last=3)
+        names = [os.path.basename(v)
+                 for v in registry.list_versions(str(tmp_path), "m")]
+        assert names == ["v00000003", "v00000004", "v00000005"]
+        assert registry.latest_valid(str(tmp_path), "m").endswith("v00000005")
+
+    def test_gc_versions_reports_removed(self, tmp_path, fo):
+        paths = [registry.publish(str(tmp_path), "m", fo) for _ in range(4)]
+        removed = registry.gc_versions(str(tmp_path), "m", keep_last=2)
+        assert removed == paths[:2]
+        assert not any(os.path.exists(p) for p in removed)
+        assert registry.gc_versions(str(tmp_path), "m", keep_last=2) == []
+
+    def test_gc_also_prunes_retired(self, tmp_path, fo):
+        for _ in range(4):
+            registry.publish(str(tmp_path), "m", fo)
+            registry.rollback(str(tmp_path), "m")
+        assert len(registry.list_retired(str(tmp_path), "m")) == 4
+        registry.publish(str(tmp_path), "m", fo, keep_last=2)
+        retired = [os.path.basename(p)
+                   for p in registry.list_retired(str(tmp_path), "m")]
+        assert retired == ["retired.v00000003", "retired.v00000004"]
+
+    def test_keep_last_must_be_positive(self, tmp_path, fo):
+        registry.publish(str(tmp_path), "m", fo)
+        with pytest.raises(ValueError):
+            registry.gc_versions(str(tmp_path), "m", keep_last=0)
